@@ -1,0 +1,222 @@
+"""Roofline analysis over the dry-run JSON (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three terms in seconds (v5e peaks):
+
+  compute    = per-device HLO FLOPs / peak_FLOP/s
+  memory     = per-device HLO HBM bytes / HBM_bw
+  collective = per-device collective bytes / ici_bw
+
+FLOPs/bytes/collective-bytes come from the trip-count-corrected HLO
+analysis (launch/hlo_analysis.py) of the SPMD-partitioned module, so
+they are already per-device per-step.  MODEL_FLOPS = 6·N·D (train,
+N=active params) or 2·N·D (decode/prefill) gives the useful-compute
+ratio, exposing remat/replication waste.
+
+CPU-compile caveat: XLA:CPU upcasts bf16 compute to f32, so byte terms
+carry a <=2x pessimism for bf16 activations vs a real TPU lowering; the
+FLOP and collective terms are layout-exact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+from repro.core.vtypes import TARGET
+from repro.configs import SHAPES, get_config
+
+
+def model_flops(arch: str, shape_name: str, accum_meta=None) -> float:
+    """Analytic useful FLOPs per step (global, fwd+bwd for train)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    _, active = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per row
+    return 2.0 * active * shape.global_batch
+
+
+def memory_bytes(rec, target=TARGET) -> float:
+    """Analytic per-device HBM traffic per step (fused-quality lowering).
+
+    The HLO-text byte count models a fully *unfused* op-by-op program
+    (every instruction round-trips HBM — the SIMDe-generic semantics); a
+    real TPU lowering fuses elementwise chains, so the memory term uses
+    an explicit traffic model instead:
+
+      train:   params (fwd+bwd+remat reads per microbatch) + optimizer
+               read/write + grad-accum buffer + ~16 materialized
+               residual-sized tensors per layer per pass + attention KV
+               streaming (+ MoE buffers)
+      prefill: fwd-only subset + cache write
+      decode:  params once + full KV/state cache read + cache write
+
+    The unfused HLO number is kept as ``bytes_unfused`` (upper bound).
+    """
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec.get("n_devices", 256)
+    accum = rec.get("accum", 1)
+    total_p, _ = cfg.param_counts()
+    p_dev = total_p / n_dev
+    bp = 2  # bf16 param/activation bytes
+
+    if shape.kind == "train":
+        rows_dev = max(1, shape.global_batch // (16 * accum))  # data=16
+        act = rows_dev * shape.seq_len * cfg.d_model * bp
+        layers = cfg.n_layers + cfg.n_enc_layers
+        traffic = 0.0
+        traffic += 3 * accum * p_dev * bp            # fwd+remat+bwd reads
+        traffic += 30 * p_dev                         # adam fp32 rw + cast
+        traffic += 2 * 4 * accum * p_dev              # grad-accum buffer rw
+        traffic += 16 * act * layers * accum          # materialized acts
+        # attention/ssd streaming per layer per microbatch (~3 visits)
+        if cfg.attn_kind != "none":
+            kv = rows_dev * shape.seq_len * max(
+                cfg.n_kv_heads * cfg.head_dim, cfg.kv_lora_rank) * bp
+            nq = max(1, shape.seq_len // 512)
+            traffic += 3 * accum * layers * nq * 2 * kv
+        if cfg.n_experts:
+            cap = shape.global_batch * shape.seq_len * cfg.top_k / \
+                cfg.n_experts * cfg.capacity_factor
+            buf = cfg.n_experts * cap * cfg.d_model * bp / n_dev
+            traffic += 4 * 3 * accum * cfg.n_layers * buf
+        # logits (vocab-sharded) fwd+bwd
+        from repro.models.layers import padded_vocab
+        traffic += 4 * accum * rows_dev * shape.seq_len * \
+            padded_vocab(cfg) / 16 * 4
+        return traffic
+
+    if shape.kind == "prefill":
+        rows_dev = max(1, shape.global_batch // 16)
+        act = rows_dev * shape.seq_len * cfg.d_model * bp
+        layers = cfg.n_layers + cfg.n_enc_layers
+        traffic = p_dev * bp + 8 * act * layers
+        if cfg.attn_kind != "none":
+            kv = rows_dev * shape.seq_len * max(
+                cfg.n_kv_heads * cfg.head_dim, cfg.kv_lora_rank) * bp
+            nq = max(1, shape.seq_len // 512)
+            traffic += layers * nq * 2 * kv + 2 * layers * kv  # + cache wr
+        return traffic
+
+    # decode: one token for every row against the full cache
+    rows_dev = max(1, shape.global_batch // min(16, shape.global_batch))
+    traffic = p_dev * bp
+    layers = cfg.n_layers
+    if cfg.attn_kind != "none":
+        slots = min(cfg.window, shape.seq_len) if (
+            cfg.window and cfg.local_global) else shape.seq_len
+        pat = cfg.layer_pattern()
+        for kind in pat:
+            if kind in ("mamba", "mamba_shared"):
+                continue
+            s_eff = min(cfg.window or shape.seq_len, shape.seq_len) \
+                if kind == "local" else shape.seq_len
+            kv_dim = max(cfg.n_kv_heads * cfg.head_dim, cfg.kv_lora_rank)
+            traffic += 2 * rows_dev * s_eff * kv_dim * bp / \
+                max(1, min(16, cfg.n_kv_heads))  # heads sharded on model
+    if cfg.ssm_state:
+        state = cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+        n_mamba = sum(k.startswith("mamba") for k in cfg.layer_pattern())
+        traffic += 2 * rows_dev * state * n_mamba / 16
+    return traffic
+
+
+def terms(rec, target=TARGET):
+    comp = rec["flops"] / target.peak_flops_bf16
+    mem = memory_bytes(rec, target) / target.hbm_bw
+    coll = rec["collective_total"] / target.ici_bw
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    n_dev = rec.get("n_devices", 256)
+    useful = mf / max(1.0, rec["flops"] * n_dev)
+    bound = max(comp, mem, coll)
+    # roofline fraction: useful work at peak vs modeled step time
+    ideal = mf / n_dev / target.peak_flops_bf16
+    frac = ideal / bound if bound > 0 else 0.0
+    return {"compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dom[0], "model_flops": mf,
+            "useful_flops_ratio": useful, "roofline_fraction": frac,
+            "bytes_unfused": rec["bytes_accessed"]}
+
+
+def suggestion(rec, t):
+    d = t["dominant"]
+    if d == "collective":
+        return ("reduce collective volume: overlap/reschedule, shard_map "
+                "local dispatch (MoE), int8 cross-pod grads")
+    if d == "memory":
+        return ("cut HBM round-trips: fuse epilogues, bigger microbatch, "
+                "bf16-native lowering, avoid replicated activations")
+    if t["useful_flops_ratio"] < 0.5:
+        return ("compute is majority waste: remove replicated attention "
+                "compute / cheaper remat policy")
+    return "compute-bound and mostly useful: tune block shapes / MXU util"
+
+
+def report(path: str, mesh: str = "pod16x16"):
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for rec in rows:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec["status"] == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": mesh, "status": "skipped",
+                        "reason": rec.get("reason", "")})
+            continue
+        if rec["status"] != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": mesh, "status": "error"})
+            continue
+        t = terms(rec)
+        out.append({"arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+                    "status": "ok", **t, "note": suggestion(rec, t),
+                    "hlo_flops_dev": rec["flops"],
+                    "hlo_bytes_dev": rec["bytes_accessed"],
+                    "coll_bytes_dev": rec["collective_total"]})
+    return out
+
+
+def fmt_table(rows):
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'dom':>5s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"{'-- ' + r['status']:>20s}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{r['compute_s'] * 1e3:>8.2f} {r['memory_s'] * 1e3:>8.2f} "
+            f"{r['collective_s'] * 1e3:>8.2f} {r['dominant'][:5]:>5s} "
+            f"{r['useful_flops_ratio']:>7.2f} "
+            f"{100 * r['roofline_fraction']:>6.1f}%")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = report(args.dryrun, args.mesh)
+    print(fmt_table(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _bench(fn, *args, n=5, warmup=1, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_xnnpack():
+    """Paper Figure 2: customized vs baseline, both cost models."""
+    from benchmarks import xnnpack_suite
+    out = xnnpack_suite.main()
+    rows = []
+    for r in out["rvv128"]:
+        rows.append((f"xnnpack/{r['name']}", 0.0,
+                     f"speedup={r['speedup']}x"))
+    return rows
+
+
+def bench_type_table():
+    """Paper Table 2: NEON type mapping on the TPU target."""
+    from repro.core import neon_type_table
+    table = neon_type_table()
+    n_valid = sum(tm.valid for tm in table.values())
+    print(f"# Table 2: {n_valid}/{len(table)} NEON types map "
+          f"(waste = padding lanes at register granularity)")
+    return [("type_table/valid", 0.0, f"{n_valid}/{len(table)}")]
+
+
+def bench_train_step():
+    """End-to-end reduced-config train step wall time (CPU)."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.train.loop import TrainConfig, make_train_step
+    from repro.data.pipeline import SyntheticLM
+    rows = []
+    for arch in ("gemma2-2b", "mamba2-1.3b", "granite-moe-1b-a400m"):
+        cfg = get_config(arch).reduced()
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        batch = SyntheticLM(cfg.vocab_size, 64, 4).batch(0)
+        step = jax.jit(make_train_step(cfg, TrainConfig()))
+        us = _bench(lambda: step(params, opt, None, batch)[3]["loss"], n=3)
+        rows.append((f"train_step/{arch}", round(us, 1), "reduced-config"))
+    return rows
+
+
+def bench_decode_step():
+    """Serving decode step wall time (CPU, reduced)."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+    rows = []
+    for arch in ("gemma2-2b", "mamba2-1.3b"):
+        cfg = get_config(arch).reduced()
+        params = M.init(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, max_batch=4, max_seq=64)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 2,
+                                     cfg.vocab_size)
+        eng.prefill(prompts)
+        tok = jnp.zeros((4,), jnp.int32)
+        us = _bench(lambda: eng.decode(tok, 1), n=3)
+        rows.append((f"decode_step/{arch}", round(us, 1), "bs=4"))
+    return rows
+
+
+def bench_roofline():
+    """§Roofline table from the dry-run artifact (if present)."""
+    path = "results/dryrun_opt.json"
+    if not os.path.exists(path):
+        path = "results/dryrun.json"
+    if not os.path.exists(path):
+        print("# roofline: results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all --mesh single --out "
+              "results/dryrun.json` first")
+        return []
+    from benchmarks import roofline
+    rows = roofline.report(path)
+    print(roofline.fmt_table(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    return [(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"dom={r['dominant']},frac={r['roofline_fraction']:.3f}")
+            for r in ok]
+
+
+def main() -> None:
+    all_rows = []
+    for fn in (bench_type_table, bench_xnnpack, bench_train_step,
+               bench_decode_step, bench_roofline):
+        try:
+            all_rows += fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"# {fn.__name__} failed: {e!r}")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver: train an LM for a few hundred steps.
+
+Default is a fast reduced config; ``--preset 100m`` trains a ~100M-param
+gemma2-family model (a few hundred steps is hours on this CPU container;
+on TPU it is the same code under a production mesh via launch/train.py).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import logging
+
+from repro.configs import get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainConfig, train
+
+
+def preset_cfg(name: str):
+    base = get_config("gemma2-2b")
+    if name == "reduced":
+        return base.reduced(), 8, 128
+    if name == "100m":
+        # ~100M params: 12L d=768 ff=3072 vocab=32k
+        return base.replace(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+            d_ff=3072, vocab_size=32_000, local_global=(1, 1), window=512,
+            sandwich_norm=False, softcap=None, final_softcap=None), 4, 512
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=("reduced", "100m"),
+                    default="reduced")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    cfg, batch, seq = preset_cfg(args.preset)
+    total, _ = cfg.param_counts()
+    print(f"training {cfg.name} [{args.preset}]: {total / 1e6:.1f}M params, "
+          f"batch={batch} seq={seq} steps={args.steps}")
+    res = train(cfg, steps=args.steps, batch_size=batch, seq_len=seq,
+                tcfg=TrainConfig(optim=AdamWConfig(
+                    lr=3e-4, warmup_steps=20, total_steps=args.steps)),
+                ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    hist = res["history"]
+    print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"over {len(hist)} steps "
+          f"(restarts={res['restarts']}, stragglers={len(res['watchdog'])})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — TPU-native portable-SIMD lowering framework (SIMDe->RVV paper)."""
+__version__ = "1.0.0"

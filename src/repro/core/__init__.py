@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution as a composable JAX feature.
+
+A portability layer that maps a fixed-width logical vector ISA (NEON
+semantics) onto the TPU vector machine through a ladder of lowerings
+(generic / vector / customized-pallas), with explicit type-tiling and
+tail predication.  See DESIGN.md §2-3 for the NEON->RVV => logical->TPU
+adaptation mapping.
+"""
+from . import isa, masks, registry, trace, vtypes
+from .registry import REGISTRY, dispatch, register, select, use_policy
+from .vtypes import TARGET, LVec, TileMap, TPUTarget, neon_type_table, tile_for
+
+__all__ = [
+    "isa", "masks", "registry", "trace", "vtypes",
+    "REGISTRY", "dispatch", "register", "select", "use_policy",
+    "TARGET", "LVec", "TileMap", "TPUTarget", "neon_type_table", "tile_for",
+]

@@ -1,0 +1,406 @@
+"""The portable logical vector ISA (NEON semantics, tile granularity).
+
+Each op mirrors a NEON intrinsic family from the paper and registers up to
+three lowerings in the conversion ladder (see registry.py):
+
+  generic — scalar-semantics emulation (the auto-vectorized-loop tier, and
+            the correctness oracle),
+  vector  — whole-array jnp (the vector-attribute tier; the paper keeps
+            this tier for simple arithmetic — Listing 8 — because it
+            already produces optimal code),
+  pallas/customized — only where the generic lowering is structurally bad,
+            mirroring the paper's customized conversions:
+              vget_high -> slidedown          (Listing 5)
+              vceq      -> mv+mseq+merge      (Listing 6)
+              vrbit     -> binary magic numbers (Listing 7)
+
+Ops take/return plain jnp arrays: a "register" is a logical tile of any
+shape (vtypes.LVec); models call these at tensor granularity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import register, dispatch
+from .trace import scalar_cost, vector_cost
+
+__all__ = [
+    "vadd", "vsub", "vmul", "vmax", "vmin", "vabs", "vneg", "vand", "vorr",
+    "veor", "vshl_n", "vshr_n", "vceq", "vcgt", "vcge", "vbsl", "vmla",
+    "vfma", "vget_high", "vget_low", "vcombine", "vext", "vrev64", "vrbit",
+    "vdup", "vpadd", "vaddv", "vmaxv", "vrecpe", "vrsqrte", "vcvt", "vzip",
+    "vtbl",
+]
+
+
+def _binary(op_name, jnp_fn, scalar_emu=None):
+    """Register generic+vector lowerings for a simple binary op.
+
+    Like the paper (Listing 8), simple arithmetic keeps the vector tier as
+    its best lowering — a customized kernel cannot beat one VPU op.
+    """
+    emu = scalar_emu or jnp_fn
+
+    @register(op_name, "generic", cost=scalar_cost(),
+              doc="scalar-loop emulation")
+    def _g(a, b):
+        flat_a, flat_b = jnp.ravel(a), jnp.ravel(jnp.broadcast_to(b, jnp.shape(a)))
+        out = jax.vmap(lambda x, y: emu(x, y))(flat_a, flat_b)
+        return out.reshape(jnp.shape(a))
+
+    @register(op_name, "vector", cost=vector_cost(),
+              doc="vector-attribute analogue (jnp whole-array)")
+    def _v(a, b):
+        return jnp_fn(a, b)
+
+    def api(a, b):
+        return dispatch(op_name, a, b)
+
+    api.__name__ = op_name
+    return api
+
+
+vadd = _binary("vadd", jnp.add)
+vsub = _binary("vsub", jnp.subtract)
+vmul = _binary("vmul", jnp.multiply)
+vmax = _binary("vmax", jnp.maximum)
+vmin = _binary("vmin", jnp.minimum)
+vand = _binary("vand", jnp.bitwise_and)
+vorr = _binary("vorr", jnp.bitwise_or)
+veor = _binary("veor", jnp.bitwise_xor)
+
+
+def _unary(op_name, jnp_fn):
+    @register(op_name, "generic", cost=scalar_cost())
+    def _g(a):
+        return jax.vmap(jnp_fn)(jnp.ravel(a)).reshape(jnp.shape(a))
+
+    @register(op_name, "vector", cost=vector_cost())
+    def _v(a):
+        return jnp_fn(a)
+
+    def api(a):
+        return dispatch(op_name, a)
+
+    api.__name__ = op_name
+    return api
+
+
+vabs = _unary("vabs", jnp.abs)
+vneg = _unary("vneg", jnp.negative)
+
+
+# -- shifts (immediate) ------------------------------------------------------
+
+@register("vshl_n", "vector", cost=vector_cost())
+def _vshl_v(a, n):
+    return jnp.left_shift(a, n)
+
+
+@register("vshl_n", "generic", cost=scalar_cost())
+def _vshl_g(a, n):
+    return jax.vmap(lambda x: jnp.left_shift(x, n))(jnp.ravel(a)).reshape(a.shape)
+
+
+def vshl_n(a, n):
+    return dispatch("vshl_n", a, n)
+
+
+@register("vshr_n", "vector", cost=vector_cost())
+def _vshr_v(a, n):
+    return jnp.right_shift(a, n)
+
+
+@register("vshr_n", "generic", cost=scalar_cost())
+def _vshr_g(a, n):
+    return jax.vmap(lambda x: jnp.right_shift(x, n))(jnp.ravel(a)).reshape(a.shape)
+
+
+def vshr_n(a, n):
+    return dispatch("vshr_n", a, n)
+
+
+# -- compares: NEON returns all-ones/all-zeros lanes of the *unsigned* type --
+
+def _umask_dtype(dtype):
+    return jnp.dtype(f"uint{jnp.dtype(dtype).itemsize * 8}")
+
+
+def _cmp(op_name, jnp_cmp):
+    @register(op_name, "generic", cost=scalar_cost(3))
+    def _g(a, b):
+        udt = _umask_dtype(a.dtype)
+        out = jax.vmap(lambda x, y: jnp.where(jnp_cmp(x, y),
+                                              jnp.array(~np.uint64(0)).astype(udt),
+                                              jnp.zeros((), udt)))(
+            jnp.ravel(a), jnp.ravel(jnp.broadcast_to(b, a.shape)))
+        return out.reshape(a.shape)
+
+    # Customized lowering, mirroring Listing 6 (vmv + vmseq + vmerge):
+    # build the zero register, compare to a mask, merge -1 under the mask.
+    @register(op_name, "pallas", cost=vector_cost(3),
+              doc="mv+mseq+merge composition (paper Listing 6)")
+    def _c(a, b):
+        udt = _umask_dtype(a.dtype)
+        vs_0 = jnp.zeros(a.shape, udt)                  # vmv.v.x
+        mask = jnp_cmp(a, b)                            # vmseq.vv
+        return jnp.where(mask, jnp.array(~np.uint64(0)).astype(udt), vs_0)  # vmerge
+
+    def api(a, b):
+        return dispatch(op_name, a, b)
+
+    api.__name__ = op_name
+    return api
+
+
+vceq = _cmp("vceq", jnp.equal)
+vcgt = _cmp("vcgt", jnp.greater)
+vcge = _cmp("vcge", jnp.greater_equal)
+
+
+# -- select / fused ops ------------------------------------------------------
+
+@register("vbsl", "vector", cost=vector_cost(3))
+def _vbsl_v(mask, a, b):
+    return jnp.where(mask != 0, a, b)
+
+
+@register("vbsl", "generic", cost=scalar_cost(3))
+def _vbsl_g(mask, a, b):
+    f = jax.vmap(lambda m, x, y: jnp.where(m != 0, x, y))
+    return f(jnp.ravel(mask), jnp.ravel(a), jnp.ravel(b)).reshape(a.shape)
+
+
+def vbsl(mask, a, b):
+    return dispatch("vbsl", mask, a, b)
+
+
+@register("vmla", "vector", cost=vector_cost(2))
+def _vmla_v(acc, a, b):
+    return acc + a * b
+
+
+@register("vmla", "generic", cost=scalar_cost(2))
+def _vmla_g(acc, a, b):
+    f = jax.vmap(lambda c, x, y: c + x * y)
+    return f(jnp.ravel(acc), jnp.ravel(a), jnp.ravel(b)).reshape(acc.shape)
+
+
+def vmla(acc, a, b):
+    return dispatch("vmla", acc, a, b)
+
+
+@register("vfma", "vector", cost=vector_cost(1))
+def _vfma_v(acc, a, b):
+    return jnp.asarray(acc) + jnp.asarray(a) * jnp.asarray(b)
+
+
+def vfma(acc, a, b):
+    return dispatch("vfma", acc, a, b)
+
+
+# -- register rearrangement (Listing 5: vget_high -> slidedown) --------------
+
+@register("vget_high", "generic", cost=scalar_cost())
+def _vgh_g(a):
+    n = a.shape[-1]
+    return jax.vmap(lambda i: a[..., n // 2 + i])(jnp.arange(n // 2)).T \
+        if a.ndim > 1 else a[n // 2:]
+
+
+@register("vget_high", "pallas", cost=vector_cost(1),
+          doc="slidedown by N/2 (paper Listing 5)")
+def _vgh_c(a):
+    n = a.shape[-1]
+    # __riscv_vslidedown_vx: one register-slide instruction.
+    return jax.lax.slice_in_dim(a, n // 2, n, axis=-1)
+
+
+def vget_high(a):
+    return dispatch("vget_high", a)
+
+
+@register("vget_low", "pallas", cost=vector_cost(1), doc="slide/extract low half")
+@register("vget_low", "generic", cost=scalar_cost())
+def _vgl(a):
+    return jax.lax.slice_in_dim(a, 0, a.shape[-1] // 2, axis=-1)
+
+
+def vget_low(a):
+    return dispatch("vget_low", a)
+
+
+@register("vcombine", "vector", cost=vector_cost(2))
+def _vcomb(a, b):
+    return jnp.concatenate([a, b], axis=-1)
+
+
+def vcombine(a, b):
+    return dispatch("vcombine", a, b)
+
+
+@register("vext", "pallas", cost=vector_cost(2), doc="slideup+slidedown merge")
+@register("vext", "generic", cost=scalar_cost(2))
+def _vext(a, b, n):
+    return jnp.concatenate([a[..., n:], b[..., :n]], axis=-1)
+
+
+def vext(a, b, n):
+    return dispatch("vext", a, b, n)
+
+
+@register("vrev64", "vector", cost=vector_cost(1))
+def _vrev64(a):
+    g = 8 // jnp.dtype(a.dtype).itemsize  # elements per 64-bit group
+    shp = a.shape[:-1] + (a.shape[-1] // g, g)
+    return jnp.flip(a.reshape(shp), axis=-1).reshape(a.shape)
+
+
+def vrev64(a):
+    return dispatch("vrev64", a)
+
+
+# -- vrbit: the paper's hard case (Listing 7, binary magic numbers) ----------
+
+@register("vrbit", "generic", cost=scalar_cost(8),
+          doc="per-element bit loop (scalarized baseline)")
+def _vrbit_g(a):
+    def rev1(x):
+        x = x.astype(jnp.uint8)
+        out = jnp.zeros((), jnp.uint8)
+        for i in range(8):
+            out = out | (((x >> i) & jnp.uint8(1)) << (7 - i))
+        return out
+
+    return jax.vmap(rev1)(jnp.ravel(a)).reshape(a.shape).astype(a.dtype)
+
+
+@register("vrbit", "pallas", cost=vector_cost(15),
+          doc="binary-magic-numbers swap network (paper Listing 7 / Freed 1983)")
+def _vrbit_c(a):
+    # Swap odd/even bits, pairs, then nibbles — 3 stages x (2 shifts, 2 ands,
+    # 1 or) = 15 vector instrs per register, vs 8 scalarized ops per element.
+    x = a.astype(jnp.uint8)
+    x = ((x >> 1) & jnp.uint8(0x55)) | ((x & jnp.uint8(0x55)) << 1)
+    x = ((x >> 2) & jnp.uint8(0x33)) | ((x & jnp.uint8(0x33)) << 2)
+    x = ((x >> 4) & jnp.uint8(0x0F)) | ((x & jnp.uint8(0x0F)) << 4)
+    return x.astype(a.dtype)
+
+
+def vrbit(a):
+    return dispatch("vrbit", a)
+
+
+# -- broadcast / horizontal reductions ---------------------------------------
+
+@register("vdup", "vector", cost=vector_cost(1))
+def _vdup(x, shape):
+    return jnp.full(shape, x)
+
+
+def vdup(x, shape):
+    return dispatch("vdup", x, shape)
+
+
+@register("vpadd", "pallas", cost=vector_cost(2), doc="pairwise add via slide+add")
+@register("vpadd", "generic", cost=scalar_cost(1))
+def _vpadd(a, b):
+    c = jnp.concatenate([a, b], axis=-1)
+    return c[..., 0::2] + c[..., 1::2]
+
+
+def vpadd(a, b):
+    return dispatch("vpadd", a, b)
+
+
+@register("vaddv", "vector", cost=vector_cost(1), doc="vredsum")
+def _vaddv_v(a):
+    return jnp.sum(a, axis=-1)
+
+
+@register("vaddv", "generic", cost=scalar_cost(1))
+def _vaddv_g(a):
+    def body(i, acc):
+        return acc + a[..., i]
+    return jax.lax.fori_loop(0, a.shape[-1], body,
+                             jnp.zeros(a.shape[:-1], a.dtype))
+
+
+def vaddv(a):
+    return dispatch("vaddv", a)
+
+
+@register("vmaxv", "vector", cost=vector_cost(1), doc="vredmax")
+def _vmaxv(a):
+    return jnp.max(a, axis=-1)
+
+
+def vmaxv(a):
+    return dispatch("vmaxv", a)
+
+
+# -- reciprocal estimates (Newton-refined on the customized tier) ------------
+
+@register("vrecpe", "generic", cost=scalar_cost(1))
+def _vrecpe_g(a):
+    return jax.vmap(lambda x: 1.0 / x)(jnp.ravel(a)).reshape(a.shape)
+
+
+@register("vrecpe", "vector", cost=vector_cost(1))
+def _vrecpe_v(a):
+    return 1.0 / a
+
+
+def vrecpe(a):
+    return dispatch("vrecpe", a)
+
+
+@register("vrsqrte", "generic", cost=scalar_cost(2))
+def _vrsqrte_g(a):
+    return jax.vmap(lambda x: 1.0 / jnp.sqrt(x))(jnp.ravel(a)).reshape(a.shape)
+
+
+@register("vrsqrte", "vector", cost=vector_cost(1))
+def _vrsqrte_v(a):
+    return jax.lax.rsqrt(a)
+
+
+def vrsqrte(a):
+    return dispatch("vrsqrte", a)
+
+
+@register("vcvt", "vector", cost=vector_cost(1))
+def _vcvt(a, dtype):
+    return a.astype(dtype)
+
+
+def vcvt(a, dtype):
+    return dispatch("vcvt", a, dtype)
+
+
+@register("vzip", "pallas", cost=vector_cost(2), doc="interleave via vrgather")
+@register("vzip", "generic", cost=scalar_cost(2))
+def _vzip(a, b):
+    return jnp.stack([a, b], axis=-1).reshape(a.shape[:-1] + (2 * a.shape[-1],))
+
+
+def vzip(a, b):
+    return dispatch("vzip", a, b)
+
+
+@register("vtbl", "generic", cost=scalar_cost(2), doc="per-lane table lookup")
+def _vtbl_g(table, idx):
+    return jax.vmap(lambda i: table[..., i])(jnp.ravel(idx)).reshape(idx.shape)
+
+
+@register("vtbl", "vector", cost=vector_cost(2), doc="vrgather")
+def _vtbl_v(table, idx):
+    return jnp.take(table, idx, axis=-1)
+
+
+def vtbl(table, idx):
+    return dispatch("vtbl", table, idx)

@@ -1,0 +1,81 @@
+"""Predicated tails: the paper's Listing-4 correctness fix, in shape space.
+
+SIMDe's generic store memcpy's ``sizeof(union)`` bytes, which clobbers
+memory when the physical vector (RVV register) is wider than the logical
+NEON vector.  The paper's customized conversion passes the exact element
+count ``vl`` to the predicated RVV store.  On TPU the same hazard appears
+whenever a logical extent is padded to a hardware tile: reductions read
+garbage lanes, stores write past the logical extent.  These helpers build
+the masks/pads that keep padded-tile compute exact.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .vtypes import TileMap
+
+
+def pad_to(x: jnp.ndarray, padded_shape: Sequence[int], value=0) -> jnp.ndarray:
+    """Pad trailing dims of ``x`` up to ``padded_shape`` with ``value``."""
+    pads = []
+    off = len(padded_shape) - x.ndim
+    for i, d in enumerate(x.shape):
+        tgt = padded_shape[i + off]
+        if tgt < d:
+            raise ValueError(f"cannot pad dim {i}: {d} > {tgt}")
+        pads.append((0, tgt - d))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def unpad(x: jnp.ndarray, logical_shape: Sequence[int]) -> jnp.ndarray:
+    """Slice a padded tile back to its logical extent (the ``vl`` store)."""
+    lead = x.ndim - len(logical_shape)
+    idx = (slice(None),) * lead + tuple(slice(0, d) for d in logical_shape)
+    return x[idx]
+
+
+def tail_mask(logical_shape: Sequence[int], padded_shape: Sequence[int],
+              dtype=jnp.bool_) -> jnp.ndarray:
+    """Boolean mask of shape ``padded_shape`` that is True on logical lanes.
+
+    This is the ``vl`` predicate of RVV generalized to N-D tiles: reductions
+    over a padded tile must be taken under this mask, and masked stores
+    must write only where it is True.
+    """
+    masks = []
+    for l, p in zip(logical_shape, padded_shape):
+        masks.append(jnp.arange(p) < l)
+    m = masks[0]
+    for nxt in masks[1:]:
+        m = m[..., None] & nxt
+    return m.astype(dtype)
+
+
+def masked_select(x: jnp.ndarray, tm: TileMap, fill) -> jnp.ndarray:
+    """Replace padding lanes with ``fill`` (identity element for reductions)."""
+    m = tail_mask(tm.logical.shape, tm.physical[-len(tm.logical.shape):])
+    return jnp.where(m, x, jnp.asarray(fill, x.dtype))
+
+
+def masked_store(dst: jnp.ndarray, src: jnp.ndarray,
+                 logical_shape: Sequence[int]) -> jnp.ndarray:
+    """Functional predicated store: write ``src``'s logical lanes into dst.
+
+    ``dst`` and ``src`` share the padded shape; only the logical extent of
+    ``src`` lands in the result — the rest of ``dst`` is preserved, which is
+    exactly what ``__riscv_vse32_v_i32m1(ptr, v, vl)`` guarantees and
+    memcpy-of-union does not (paper Listing 4).
+    """
+    m = tail_mask(logical_shape, src.shape[-len(logical_shape):])
+    m = jnp.broadcast_to(m, src.shape)
+    return jnp.where(m, src, dst)
+
+
+def padded_and_mask(x: jnp.ndarray, tm: TileMap) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xp = pad_to(x, tm.physical)
+    m = tail_mask(x.shape, xp.shape)
+    return xp, m

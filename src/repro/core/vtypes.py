@@ -1,0 +1,191 @@
+"""Logical vector types and their mapping onto TPU physical tiles.
+
+This is the TPU-native analogue of the paper's *type conversion* strategy
+(SIMDe §3.2, Table 2).  The paper maps fixed-width NEON register types
+(64/128-bit) onto RISC-V VLA register types whenever ``vlen >= logical
+width`` using LLVM's fixed-vlen attribute.  On TPU the physical vector
+machine is *fixed* rather than VLA, but the same problem appears inverted:
+logical tiles must be packed into hardware-native shapes —
+
+  * VPU vector registers are (8 sublanes, 128 lanes); the sublane tiling
+    depends on dtype (fp32: 8, bf16: 16, int8/fp8: 32),
+  * the MXU consumes 128x128 operand tiles,
+  * VMEM working sets are limited (~16 MiB usable per core on v5e).
+
+``TileMap`` carries the (logical shape -> padded physical tile, tail mask)
+mapping, which plays the role of the paper's NEON-type -> vint*m1_t table,
+and the ``vl``-style element count that makes partial stores correct
+(paper Listing 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# TPU target description (v5e). Peaks are used by the roofline model too.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUTarget:
+    """Hardware constants for the lowering + roofline layers."""
+
+    name: str = "tpu-v5e"
+    lane: int = 128                 # minor-most vector dimension
+    mxu: int = 128                  # MXU systolic tile (128x128)
+    vmem_bytes: int = 16 * 2**20    # usable VMEM budget per core
+    hbm_bytes: int = 16 * 2**30     # HBM per chip
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link
+
+    def sublane(self, dtype) -> int:
+        """Native second-minor tiling for ``dtype`` (fp32:8 bf16:16 i8:32)."""
+        itemsize = jnp.dtype(dtype).itemsize
+        return max(8, 32 // max(1, itemsize)) if itemsize < 4 else 8
+
+    def vreg_elems(self, dtype) -> int:
+        """Elements per vector register for ``dtype``."""
+        return self.sublane(dtype) * self.lane
+
+
+TARGET = TPUTarget()
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Logical vectors and the tile map (Table 2 analogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LVec:
+    """A *logical* fixed-shape vector, like a NEON register type.
+
+    NEON's int32x4_t is ``LVec((4,), jnp.int32)``.  Framework-level tiles
+    (e.g. one GEMM block) are LVecs too — the abstraction is shape+dtype,
+    decoupled from physical layout, exactly like SIMDe's generic union.
+    """
+
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+
+    @property
+    def elems(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bits(self) -> int:
+        return self.elems * jnp.dtype(self.dtype).itemsize * 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TileMap:
+    """Mapping of a logical vector onto a padded physical TPU tile.
+
+    ``valid`` is the paper's substitution rule: NEON type ``t`` maps onto an
+    RVV register iff ``vlen >= width(t)``; here a logical tile maps onto a
+    physical tile iff every logical dim fits the padded dim.  ``vl`` is the
+    number of *meaningful* elements — the quantity the paper's customized
+    store (Listing 4) passes to ``__riscv_vse32`` instead of memcpy'ing the
+    whole union.
+    """
+
+    logical: LVec
+    physical: Tuple[int, ...]
+
+    @property
+    def valid(self) -> bool:
+        if len(self.physical) < len(self.logical.shape):
+            return False
+        pad = self.physical[len(self.physical) - len(self.logical.shape):]
+        return all(l <= p for l, p in zip(self.logical.shape, pad))
+
+    @property
+    def vl(self) -> int:
+        return self.logical.elems
+
+    @property
+    def padded_elems(self) -> int:
+        return int(np.prod(self.physical))
+
+    @property
+    def waste(self) -> float:
+        """Fraction of physical lanes that carry no logical data."""
+        return 1.0 - self.vl / max(1, self.padded_elems)
+
+
+def tile_for(lv: LVec, target: TPUTarget = TARGET, *, mxu: bool = False) -> TileMap:
+    """Compute the physical tile for a logical vector (the Table-2 lookup).
+
+    1-D logical vectors are laid out along lanes of a single vreg row;
+    >=2-D tiles pad the minor dim to the lane width and the second-minor
+    dim to the dtype sublane count (or 128 for MXU operands).
+    """
+    shape = lv.shape
+    if len(shape) == 0:
+        return TileMap(lv, (1, target.lane))
+    if len(shape) == 1:
+        return TileMap(lv, (1, round_up(shape[0], target.lane)))
+    second = target.mxu if mxu else target.sublane(lv.dtype)
+    phys = tuple(shape[:-2]) + (
+        round_up(shape[-2], second),
+        round_up(shape[-1], target.lane),
+    )
+    return TileMap(lv, phys)
+
+
+# ---------------------------------------------------------------------------
+# The NEON type table (the paper's Table 2, reproduced for the TPU target)
+# ---------------------------------------------------------------------------
+
+_NEON_TYPES = {
+    # 64-bit D registers
+    "int8x8_t": ((8,), jnp.int8), "int16x4_t": ((4,), jnp.int16),
+    "int32x2_t": ((2,), jnp.int32), "int64x1_t": ((1,), jnp.int64),
+    "uint8x8_t": ((8,), jnp.uint8), "uint16x4_t": ((4,), jnp.uint16),
+    "uint32x2_t": ((2,), jnp.uint32), "uint64x1_t": ((1,), jnp.uint64),
+    "float16x4_t": ((4,), jnp.float16), "float32x2_t": ((2,), jnp.float32),
+    "float64x1_t": ((1,), jnp.float64),
+    # 128-bit Q registers
+    "int8x16_t": ((16,), jnp.int8), "int16x8_t": ((8,), jnp.int16),
+    "int32x4_t": ((4,), jnp.int32), "int64x2_t": ((2,), jnp.int64),
+    "uint8x16_t": ((16,), jnp.uint8), "uint16x8_t": ((8,), jnp.uint16),
+    "uint32x4_t": ((4,), jnp.uint32), "uint64x2_t": ((2,), jnp.uint64),
+    "float16x8_t": ((8,), jnp.float16), "float32x4_t": ((4,), jnp.float32),
+    "float64x2_t": ((2,), jnp.float64),
+}
+
+
+def neon_type_table(target: TPUTarget = TARGET):
+    """NEON type -> (LVec, TileMap) for the TPU target — Table 2 analogue.
+
+    Every NEON type is mappable on TPU (lane width 128 elems >= any NEON
+    register), i.e. the TPU column of Table 2 has no 'x' entries — but the
+    ``waste`` column shows why whole-tile batching (the framework layer)
+    rather than per-register emulation is the right adaptation.
+    """
+    table = {}
+    for name, (shape, dtype) in _NEON_TYPES.items():
+        lv = LVec(shape, dtype)
+        table[name] = tile_for(lv, target)
+    return table
+
+
+def vmem_fit(block_elems_by_dtype, target: TPUTarget = TARGET,
+             headroom: float = 0.9) -> bool:
+    """True if the summed block working set fits the VMEM budget."""
+    total = sum(int(n) * jnp.dtype(dt).itemsize for n, dt in block_elems_by_dtype)
+    return total <= target.vmem_bytes * headroom
+
+
+def mxu_aligned(*dims: int, target: TPUTarget = TARGET) -> bool:
+    return all(d % target.mxu == 0 for d in dims)

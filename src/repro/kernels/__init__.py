@@ -1,0 +1,10 @@
+"""Customized TPU lowerings (the paper's "customized RVV implementations").
+
+One module per compute hot-spot, each with a ``pl.pallas_call`` +
+explicit BlockSpec VMEM tiling; ``ops.py`` is the public jit'd/dispatched
+API and ``ref.py`` holds the pure-jnp oracles.  The ten XNNPACK functions
+from the paper's §4.2 plus the beyond-paper LM hot-spots.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

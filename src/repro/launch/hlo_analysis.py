@@ -1,0 +1,255 @@
+"""Trip-count-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+XLA's ``HloCostAnalysis`` visits every instruction once, so ``while``
+bodies (our accum/layer/chunk scans) are counted a single time — useless
+for a roofline.  This module parses ``compiled.as_text()`` instead:
+
+  * computations are split into blocks; a call graph is built from
+    ``body=/condition=/calls=/to_apply=`` references,
+  * while trip counts are read off the canonical loop condition
+    (``compare(iv, constant(N))``),
+  * multiplicity propagates from ENTRY (fusion/call inherit the caller's,
+    while bodies multiply by their trip count),
+  * per-block costs are summed with multiplicity:
+      - dot FLOPs: 2 * |out| * prod(lhs contracting dims)
+      - HBM bytes: operand + result bytes of top-level (fused)
+        instructions — fusion internals excluded, mirroring buffer
+        materialization,
+      - collective bytes by kind (all-reduce / all-gather / ...)
+
+Shapes in the partitioned module are per-device shard shapes, so all
+totals are *per-device per-step* — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALL_REF = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "after-all(", "partition-id(", "replica-id(")
+
+
+def _shape_elems_bytes(type_str):
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0, 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    if not dims:
+        n = 1
+    return n, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes(expr):
+    """(elems, bytes) for every typed value mentioned in the expression."""
+    out = []
+    for m in _SHAPE_RE.finditer(expr):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((n, n * _DTYPE_BYTES.get(dt, 4)))
+    return out
+
+
+class Block:
+    def __init__(self, name):
+        self.name = name
+        self.lines = []
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = defaultdict(float)
+        self.whiles = []        # (body, condition)
+        self.calls = []         # inherited-multiplicity callees
+        self.is_fusion = name.startswith("fused") or ".fused" in name
+
+
+def parse_blocks(text: str) -> Dict[str, Block]:
+    blocks = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line:
+            head = line.split("{")[0].strip()
+            name = head.split("(")[0].strip().lstrip("%")
+            name = name.replace("ENTRY ", "").strip()
+            if name.startswith("HloModule"):
+                cur = None
+                continue
+            cur = Block(name)
+            if "ENTRY" in line:
+                cur.entry = True
+            blocks[name] = cur
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    return blocks
+
+
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_KEYS = ("body=", "condition=", "calls=", "to_apply=")
+
+
+def _operands(expr: str):
+    """Operand names inside the op's argument parens (attr refs excluded)."""
+    lp = expr.find("(")
+    if lp < 0:
+        return []
+    depth = 0
+    end = lp
+    for i in range(lp, len(expr)):
+        if expr[i] == "(":
+            depth += 1
+        elif expr[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = expr[lp + 1:end]
+    return _OPND_RE.findall(args)
+
+
+def _dims_of(type_str):
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def analyze_block(b: Block):
+    # first pass: symbol table name -> output type string
+    symtab = {}
+    parsed = []
+    for line in b.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, expr = m.group(1), m.group(2)
+        tm = _SHAPE_RE.match(expr.strip())
+        symtab[name] = tm.group(0) if tm else ""
+        parsed.append((name, expr))
+
+    for name, expr in parsed:
+        if "while(" in expr:
+            bm = re.search(r"body=%?([\w.\-]+)", expr)
+            cm = re.search(r"condition=%?([\w.\-]+)", expr)
+            if bm and cm:
+                b.whiles.append((bm.group(1), cm.group(1)))
+            continue
+        b.calls.extend(_CALL_REF.findall(expr))
+        opnds = _operands(expr)
+        # flops: dot with contracted size from the lhs operand's def
+        if re.search(r"\bdot\(", expr):
+            out_elems, _ = _shape_elems_bytes(expr)
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", expr)
+            lhs_dims = _dims_of(symtab.get(opnds[0], "")) if opnds else None
+            if cm and lhs_dims:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+            b.flops += 2.0 * out_elems * k
+        # collectives: output bytes
+        for kind in COLLECTIVES:
+            if re.search(rf"\b{kind}(?:-start)?\(", expr):
+                _, nbytes = _shape_elems_bytes(expr)
+                b.coll[kind] += nbytes
+                break
+        # HBM traffic: output + operand bytes of top-level instructions
+        if b.is_fusion:
+            continue
+        stripped = expr.strip()
+        if any(stripped.startswith(s) or f" {s}" in stripped[:48]
+               for s in _SKIP_OPS):
+            continue
+        _, obytes = _shape_elems_bytes(expr)
+        ibytes = sum(_shape_elems_bytes(symtab.get(o, ""))[1] for o in opnds)
+        b.bytes += obytes + ibytes
+
+
+def trip_count(blocks, cond_name: str) -> int:
+    cond = blocks.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for line in cond.lines:
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def analyze(text: str, entry_hint: str = None):
+    blocks = parse_blocks(text)
+    for b in blocks.values():
+        analyze_block(b)
+    entry = None
+    for name, b in blocks.items():
+        if getattr(b, "entry", False):
+            entry = name
+    if entry is None:  # fallback: block that nobody references
+        referenced = set()
+        for b in blocks.values():
+            referenced.update(c for c, _ in b.whiles)
+            referenced.update(c for _, c in b.whiles)
+            referenced.update(b.calls)
+        cands = [n for n in blocks if n not in referenced]
+        entry = cands[-1] if cands else next(iter(blocks))
+
+    # DFS accumulation (the scan/cond/fusion call graph is acyclic)
+    mult = defaultdict(float)
+
+    import sys
+    sys.setrecursionlimit(10000)
+
+    def visit(name, m):
+        if name not in blocks or m <= 0:
+            return
+        mult[name] += m
+        b = blocks[name]
+        for callee in b.calls:
+            visit(callee, m)
+        for body, cond in b.whiles:
+            trips = trip_count(blocks, cond)
+            visit(cond, m * (trips + 1))
+            visit(body, m * trips)
+
+    visit(entry, 1.0)
+
+    totals = {"flops": 0.0, "bytes": 0.0,
+              "collectives": defaultdict(float), "whiles": []}
+    for name, b in blocks.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        totals["flops"] += m * b.flops
+        totals["bytes"] += m * b.bytes
+        for kind, v in b.coll.items():
+            totals["collectives"][kind] += m * v
+    for name, b in blocks.items():
+        for body, cond in b.whiles:
+            totals["whiles"].append(
+                {"body": body, "trips": trip_count(blocks, cond),
+                 "mult": mult.get(name, 0.0)})
+    totals["collectives"] = dict(totals["collectives"])
+    totals["collective_total"] = sum(totals["collectives"].values())
+    totals["static_flops_blocks"] = sum(b.flops for b in blocks.values())
+    return totals

@@ -1,0 +1,4 @@
+"""Composable model definitions for the architecture zoo."""
+from . import attention, blocks, layers, model, moe, ssm
+
+__all__ = ["attention", "blocks", "layers", "model", "moe", "ssm"]

@@ -1,0 +1,206 @@
+"""Attention blocks: GQA (+ sliding window / softcap / qk-norm), MLA,
+cross-attention, with train/prefill/decode cache handling.
+
+Cache layouts (static shapes; ``lengths`` tracks the valid prefix):
+  gqa global : k, v (B, S_max, Hkv, hd)
+  gqa local  : ring buffer of ``window`` slots (slot = pos % window);
+               softmax is permutation-invariant over kv so slot order is
+               irrelevant once keys carry RoPE.
+  mla        : c_kv (B, S_max, kv_lora), k_rope (B, S_max, rope_dim) —
+               decode uses the *absorbed* form (q into W_uk, out through
+               W_uv) so the compressed cache is attended directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, d_in=None):
+    d = d_in or cfg.d_model
+    dt = L.dtype_of(cfg)
+    hd, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, h * hd, dt),
+        "wk": L.dense_init(ks[1], d, hkv * hd, dt),
+        "wv": L.dense_init(ks[2], d, hkv * hd, dt),
+        "wo": L.dense_init(ks[3], h * hd, cfg.d_model, dt),
+    }
+    if cfg.qk_norm:
+        p["qn"] = L.norm_init(hd, "rmsnorm")
+        p["kn"] = L.norm_init(hd, "rmsnorm")
+    return p
+
+
+def gqa_cache_init(cfg, batch, s_max, window=None, dtype=None):
+    dt = dtype or L.dtype_of(cfg)
+    slots = min(window, s_max) if window else s_max
+    shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def gqa_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
+              window=None, memory=None, causal=True):
+    """x:(B,S,d).  mode in train|prefill|decode.  memory: cross-attn kv."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.linear(params["wq"], x).reshape(b, s, h, hd)
+    if memory is None:
+        k = L.linear(params["wk"], x).reshape(b, s, hkv, hd)
+        v = L.linear(params["wv"], x).reshape(b, s, hkv, hd)
+    else:  # cross attention: kv from encoder memory (cached at prefill)
+        k, v = memory
+    if cfg.qk_norm:
+        q = L.norm_apply(params["qn"], q)
+        if memory is None:
+            k = L.norm_apply(params["kn"], k)
+    if cfg.rope_theta and memory is None:
+        q = L.rope_apply(q, positions, cfg.rope_theta)
+        k = L.rope_apply(k, positions, cfg.rope_theta)
+
+    if memory is not None:
+        out = ops.attention(q, k, v, causal=False, softcap=cfg.softcap)
+        return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
+
+    if mode == "train":
+        out = ops.attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.softcap)
+        return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
+
+    if mode == "prefill":
+        slots = cache["k"].shape[1]
+        if window and slots < s:  # ring: keep the last ``window`` positions
+            # write positions p in [s-slots, s) at slot p % slots
+            ppos = jnp.arange(s - slots, s)
+            cache = {
+                "k": cache["k"].at[:, ppos % slots].set(k[:, s - slots:]),
+                "v": cache["v"].at[:, ppos % slots].set(v[:, s - slots:]),
+            }
+        else:
+            cache = {"k": cache["k"].at[:, :s].set(k),
+                     "v": cache["v"].at[:, :s].set(v)}
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.softcap)
+        return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
+
+    # decode: s == 1, write at pos = lengths (per row), attend valid prefix
+    slots = cache["k"].shape[1]
+    slot = (lengths % slots) if window else lengths
+    bidx = jnp.arange(b)
+    cache = {"k": cache["k"].at[bidx, slot].set(k[:, 0]),
+             "v": cache["v"].at[bidx, slot].set(v[:, 0])}
+    valid = jnp.minimum(lengths + 1, slots)
+    out = ops.decode_attention(q, cache["k"], cache["v"], valid,
+                               softcap=cfg.softcap)
+    return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, d_in=None):
+    d = d_in or cfg.d_model
+    dt = L.dtype_of(cfg)
+    h = cfg.n_heads
+    r, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": L.dense_init(ks[0], d, cfg.kv_lora_rank + r, dt),
+        "kv_norm": L.norm_init(cfg.kv_lora_rank, "rmsnorm"),
+        "w_uk": L.dense_init(ks[1], cfg.kv_lora_rank, h * nd, dt),
+        "w_uv": L.dense_init(ks[2], cfg.kv_lora_rank, h * vd, dt),
+        "wo": L.dense_init(ks[3], h * vd, cfg.d_model, dt),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = L.dense_init(ks[4], d, cfg.q_lora_rank, dt)
+        p["q_norm"] = L.norm_init(cfg.q_lora_rank, "rmsnorm")
+        p["w_uq"] = L.dense_init(ks[5], cfg.q_lora_rank, h * (nd + r), dt)
+    else:
+        p["wq"] = L.dense_init(ks[6], d, h * (nd + r), dt)
+    return p
+
+
+def mla_cache_init(cfg, batch, s_max, dtype=None):
+    dt = dtype or L.dtype_of(cfg)
+    return {"c_kv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dt)}
+
+
+def _mla_q(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    r, nd = cfg.qk_rope_dim, cfg.qk_nope_dim
+    if cfg.q_lora_rank:
+        cq = L.norm_apply(params["q_norm"], L.linear(params["w_dq"], x))
+        q = L.linear(params["w_uq"], cq)
+    else:
+        q = L.linear(params["wq"], x)
+    q = q.reshape(b, s, h, nd + r)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = L.rope_apply(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, x, cfg, positions):
+    b, s, _ = x.shape
+    r = cfg.qk_rope_dim
+    dkv = L.linear(params["w_dkv"], x)
+    c_kv = L.norm_apply(params["kv_norm"], dkv[..., :cfg.kv_lora_rank])
+    k_rope = L.rope_apply(dkv[..., cfg.kv_lora_rank:][:, :, None, :],
+                          positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
+              **_):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    r, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    scale = 1.0 / np.sqrt(nd + r)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+
+    if mode in ("train", "prefill"):
+        c_kv, k_rope = _mla_ckv(params, x, cfg, positions)
+        k_nope = L.linear(params["w_uk"], c_kv).reshape(b, s, h, nd)
+        v = L.linear(params["w_uv"], c_kv).reshape(b, s, h, vd)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope[:, :, None, :],
+                                              (b, s, h, r))], -1)
+        out = ops.attention(q, k, v, causal=True, scale=scale)
+        if mode == "prefill":
+            cache = {"c_kv": cache["c_kv"].at[:, :s].set(c_kv),
+                     "k_rope": cache["k_rope"].at[:, :s].set(k_rope)}
+        return L.linear_rp(params["wo"], out.reshape(b, s, h * vd), cfg), cache
+
+    # decode: absorbed attention over the compressed cache
+    c_kv_new, k_rope_new = _mla_ckv(params, x, cfg, positions)
+    bidx = jnp.arange(b)
+    cache = {"c_kv": cache["c_kv"].at[bidx, lengths].set(c_kv_new[:, 0]),
+             "k_rope": cache["k_rope"].at[bidx, lengths].set(k_rope_new[:, 0])}
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]
+    w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, nd)
+    # absorb: q_eff[h] = q_nope[h] @ W_uk[:, h, :].T  -> kv_lora dims
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    logits = (jnp.einsum("bqhr,bkr->bhqk", q_eff, c_kv.astype(jnp.float32)) +
+              jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))) * scale
+    kpos = jnp.arange(c_kv.shape[1])[None, None, None, :]
+    logits = jnp.where(kpos <= lengths[:, None, None, None], logits, -1e30)
+    p_attn = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", p_attn, c_kv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vd)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, s, h * vd)
+    return L.linear_rp(params["wo"], out, cfg), cache

@@ -1,0 +1,230 @@
+"""Parameter/activation sharding rules (TP / EP / FSDP / SP).
+
+Megatron-style pairing: column-parallel projections shard their output
+dim on 'model'; the following row-parallel projection shards its input
+dim on 'model', so each block pays one reduce (or reduce-scatter under
+SP).  MoE expert stacks ride 'model' with their leading E axis (expert
+parallelism).  When ``cfg.fsdp`` the other matrix dim additionally
+shards over 'data' (param all-gather per layer inside the scan).
+Stacked (scan) leading axes are always unsharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def active_mesh(mesh):
+    """Set the mesh used by :func:`constrain` during tracing."""
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+def current_mesh():
+    return getattr(_TLS, "mesh", None)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the active mesh (no-op without).
+
+    ``"batch"`` entries expand to the mesh's non-model axes; axes that do
+    not fit the dim (axis size > dim) are dropped.
+    """
+    mesh = getattr(_TLS, "mesh", None)
+    if mesh is None:
+        return x
+    ba = batch_axes(mesh)
+    expanded = []
+    for s in spec:
+        expanded.append(ba if s == "batch" else s)
+    fitted = fit_spec(P(*expanded), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return n
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop axes whose size exceeds the dim (e.g. 8 kv heads on a 16-way
+    'model' axis) — the sharding analogue of the paper's validity rule."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is not None and (i >= len(shape) or
+                                  shape[i] < _axes_size(mesh, entry)):
+            out.append(None)
+        else:
+            out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# rules keyed by parameter leaf name: (logical_rank, spec builder)
+def _rules(fsdp_axis):
+    f = fsdp_axis
+    col = (2, lambda: P(f, "model"))      # (d_in, d_out-model)
+    row = (2, lambda: P("model", f))      # (d_in-model, d_out)
+    return {
+        # embeddings / head
+        "emb": (2, lambda: P("model", f)),       # vocab-parallel
+        "head": (2, lambda: P(f, "model")),
+        # attention
+        "wq": col, "wk": col, "wv": col, "wo": row,
+        "w_uq": col, "w_uk": col, "w_uv": col,
+        "w_dq": (2, lambda: P(f, None)), "w_dkv": (2, lambda: P(f, None)),
+        # mlp
+        "wg": col, "wu": col, "wd": row,
+        # moe experts: leading E axis = expert parallelism
+        "router": (2, lambda: P(None, None)),
+        # mamba
+        "w_in": col, "w_out": row,
+        "conv_w": (2, lambda: P(None, "model")),
+        "conv_b": (1, lambda: P("model")),
+        "A_log": (1, lambda: P(None)), "D": (1, lambda: P(None)),
+        "dt_bias": (1, lambda: P(None)),
+        # norms
+        "w": (1, lambda: P(None)), "b": (1, lambda: P(None)),
+    }
+
+
+_MOE_RULES = {
+    # (E, d, f) / (E, f, d) expert stacks — expert axis = EP over 'model'
+    "we_g": lambda f: P("model", f, None),
+    "we_u": lambda f: P("model", f, None),
+    "we_d": lambda f: P("model", None, f),
+}
+
+
+def _leaf_spec(path, leaf, cfg, fsdp_axis) -> P:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    name = names[-1] if names else ""
+    in_moe = name in _MOE_RULES
+    if in_moe:
+        base = _MOE_RULES[name](fsdp_axis)
+        rank = 3
+    else:
+        rules = _rules(fsdp_axis)
+        if name not in rules:
+            return P()
+        rank, builder = rules[name]
+        base = builder()
+    extra = leaf.ndim - rank
+    if extra < 0:
+        return P()
+    return P(*([None] * extra + list(base)))
+
+
+def param_pspecs(params, cfg, mesh=None):
+    """Pytree of PartitionSpec matching ``params`` (works on SDS trees)."""
+    fsdp_axis = "data" if cfg.fsdp else None
+
+    def spec(path, leaf):
+        s = _leaf_spec(path, leaf, cfg, fsdp_axis)
+        return fit_spec(s, leaf.shape, mesh) if mesh is not None else s
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def opt_pspecs(params, cfg, mesh=None):
+    """Optimizer-state specs: ZeRO-1 — always FSDP-shard moments."""
+
+    def spec(path, leaf):
+        s = _leaf_spec(path, leaf, cfg, "data")
+        return fit_spec(s, leaf.shape, mesh) if mesh is not None else s
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def batch_spec(mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def token_spec(mesh) -> P:
+    return P(batch_axes(mesh), None)
+
+
+def activation_spec(mesh, cfg) -> Optional[P]:
+    """Residual-stream constraint; SP shards sequence over 'model'."""
+    if cfg.use_sp:
+        return P(batch_axes(mesh), "model", None)
+    return P(batch_axes(mesh), None, None)
+
+
+def cache_pspecs(cache, mesh):
+    """KV/state caches: batch over data axes, heads over 'model'.
+
+    When the kv-head count is smaller than the 'model' axis the head dim
+    is sharded instead (GSPMD psums the contraction) — the validity-rule
+    fallback again.
+    """
+    ba = batch_axes(mesh)
+    msize = _axes_size(mesh, "model")
+
+    def spec(path, leaf):
+        stacked = any(isinstance(p, jax.tree_util.DictKey) and p.key == "unit"
+                      for p in path)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if len(shape) == 4:   # (B, S, Hkv, hd) kv | (B, H, p, n) ssm state
+            s = P(ba, None, "model", None) if shape[2] >= msize else \
+                P(ba, None, None, "model")
+        elif len(shape) == 3:  # (B, S, C) mla / conv history caches
+            s = P(ba, None, None)
+        else:
+            s = P(ba)
+        s = fit_spec(s, shape, mesh)
+        return P(*([None] + list(s))) if stacked else s
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def gather_layer_params(ps, cfg):
+    """FSDP fix inside scan bodies: constrain the *sliced* per-layer
+    params to their TP-only sharding (fsdp axis dropped), forcing GSPMD
+    to all-gather the per-layer slice instead of the whole stacked
+    parameter array per iteration (§Perf iteration 4)."""
+    mesh = current_mesh()
+    if mesh is None or not cfg.fsdp:
+        return ps
+
+    def one(path, leaf):
+        s = _leaf_spec(path, leaf, cfg, None)   # fsdp_axis=None -> TP only
+        s = fit_spec(s, leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, s))
+
+    return jax.tree_util.tree_map_with_path(one, ps)
+
+
+def ns(mesh, tree_of_specs):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_params(params, mesh, cfg):
+    specs = param_pspecs(params, cfg, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)

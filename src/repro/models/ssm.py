@@ -1,0 +1,128 @@
+"""Mamba2 block (SSD core through the kernel ladder) + recurrent decode.
+
+Train/prefill use the chunked SSD lowering (kernels/ssd.py customized,
+ref.ssd vector tier).  Decode keeps {conv window, (h, p, n) SSM state}
+as the cache and applies the recurrence in closed form — the SSM
+replacement for a KV cache (state size is O(1) in sequence length, which
+is why the long_500k cell runs for ssm/hybrid archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import layers as L
+
+
+def mamba_init(key, cfg):
+    dt = L.dtype_of(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": L.dense_init(ks[0], d, 2 * di + 2 * g * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gn": L.norm_init(di, "rmsnorm"),
+        "w_out": L.dense_init(ks[2], di, d, dt),
+    }
+
+
+def mamba_cache_init(cfg, batch, dtype=None):
+    dt = dtype or L.dtype_of(cfg)
+    di = cfg.d_inner
+    conv_dim = di + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dt),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def _split(zxbcdt, cfg):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, history=None):
+    """Depthwise causal conv width K via shifted adds.  xbc:(B,S,C)."""
+    bsz, s, c = xbc.shape
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((bsz, k - 1, c), xbc.dtype)
+    padded = jnp.concatenate([history, xbc], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(k):
+        out = out + padded[:, i:i + s].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_hist = padded[:, -(k - 1):] if k > 1 else history
+    return out.astype(xbc.dtype), new_hist
+
+
+def mamba_apply(params, x, cfg, *, mode, cache=None, **_):
+    """x:(B, S, d) -> (y, cache)."""
+    bsz, s, d = x.shape
+    di, g, n, h, p = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    zxbcdt = L.linear(params["w_in"], x)
+    z, xbc, dt_raw = _split(zxbcdt, cfg)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if mode == "decode":
+        # recurrent step (s == 1)
+        hist = cache["conv"]
+        xbc_conv, hist = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                      history=hist)
+        xbc_conv = (xbc_conv.astype(jnp.float32) *
+                    jax.nn.sigmoid(xbc_conv.astype(jnp.float32))).astype(xbc.dtype)
+        xs = xbc_conv[..., :di].reshape(bsz, 1, h, p)
+        B = xbc_conv[..., di:di + g * n].reshape(bsz, 1, g, n)
+        C = xbc_conv[..., di + g * n:].reshape(bsz, 1, g, n)
+        rep = h // g
+        Bh = jnp.repeat(B, rep, axis=2)[:, 0].astype(jnp.float32)   # (B,h,n)
+        Ch = jnp.repeat(C, rep, axis=2)[:, 0].astype(jnp.float32)
+        dt0 = dt[:, 0]                                              # (B,h)
+        dA = jnp.exp(dt0 * A[None, :])
+        state = cache["state"] * dA[..., None, None] + \
+            (dt0[..., None] * xs[:, 0].astype(jnp.float32))[..., None] * \
+            Bh[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + \
+            params["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(bsz, 1, di).astype(x.dtype)
+        cache = {"conv": hist, "state": state}
+    else:
+        xbc_conv, hist = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xbc_conv = (xbc_conv.astype(jnp.float32) *
+                    jax.nn.sigmoid(xbc_conv.astype(jnp.float32))).astype(xbc.dtype)
+        xs = xbc_conv[..., :di].reshape(bsz, s, h, p)
+        B = xbc_conv[..., di:di + g * n].reshape(bsz, s, g, n)
+        C = xbc_conv[..., di + g * n:].reshape(bsz, s, g, n)
+        y = ops.ssd(xs, dt.astype(jnp.float32), A, B, C, params["D"],
+                    chunk=cfg.ssm_chunk)
+        y = y.reshape(bsz, s, di)
+        if mode == "prefill":
+            # closed-form final state for the decode cache:
+            # S_final = sum_j exp(la_S - la_j) dt_j x_j (x) B_j
+            rep = h // g
+            Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)      # (B,s,h,n)
+            la = jnp.cumsum(dt * A[None, None, :], axis=1)           # (B,s,h)
+            wj = jnp.exp(la[:, -1:, :] - la) * dt                    # (B,s,h)
+            state = jnp.einsum("bshp,bshn->bhpn",
+                               xs.astype(jnp.float32) * wj[..., None], Bh)
+            cache = {"conv": hist, "state": state}
+
+    y = L.norm_apply(params["gn"], (y.astype(jnp.float32) *
+                                    jax.nn.sigmoid(z.astype(jnp.float32))
+                                    ).astype(x.dtype))
+    return L.linear_rp(params["w_out"], y, cfg), cache

@@ -1,0 +1,89 @@
+"""Serving engine: batched prefill + decode over static-shape caches.
+
+The engine owns a fixed-capacity request batch (continuous batching at
+slot granularity): prefill fills a slot's cache, decode advances every
+active slot one token per step (one ``serve_step`` — the function the
+decode-shape dry-run cells lower).  Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg):
+    def prefill(params, cache, batch):
+        logits, cache, _ = M.forward(params, cfg, batch, mode="prefill",
+                                     cache=cache)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, cache, token, lengths) -> (logits, cache)."""
+    def serve_step(params, cache, tokens, lengths):
+        logits, cache, _ = M.forward(params, cfg, {"tokens": tokens},
+                                     mode="decode", cache=cache,
+                                     lengths=lengths)
+        return logits[:, 0], cache
+    return serve_step
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: Any
+    params: Any
+    max_batch: int
+    max_seq: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        p_off = self.cfg.n_patches if self.cfg.family == "vlm" else 0
+        self.cache = M.init_cache(self.cfg, self.max_batch,
+                                  self.max_seq + p_off)
+        self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
+        self._prefill = jax.jit(make_prefill_step(self.cfg))
+        self._step = jax.jit(make_serve_step(self.cfg))
+
+    def prefill(self, prompts: jnp.ndarray, extra: Optional[dict] = None):
+        """prompts:(B, S_prompt) — fills the cache, returns first tokens."""
+        batch = {"tokens": prompts, **(extra or {})}
+        last_logits, self.cache = self._prefill(self.params, self.cache, batch)
+        p_off = self.cfg.n_patches if self.cfg.family == "vlm" else 0
+        self.lengths = jnp.full((prompts.shape[0],),
+                                prompts.shape[1] + p_off, jnp.int32)
+        return self._sample(last_logits)
+
+    def decode(self, tokens: jnp.ndarray, steps: int,
+               rng: Optional[jax.Array] = None) -> np.ndarray:
+        """Advance ``steps`` tokens for the whole batch; returns (B, steps)."""
+        out = []
+        cur = tokens
+        for i in range(steps):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            cur[:, None], self.lengths)
+            self.lengths = self.lengths + 1
+            cur = self._sample(logits)
+            out.append(np.asarray(cur))
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(int(np.sum(np.asarray(self.lengths))))
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.temperature).astype(jnp.int32)
+
+    def generate(self, prompts: jnp.ndarray, steps: int,
+                 extra: Optional[dict] = None) -> np.ndarray:
+        first = self.prefill(prompts, extra)
+        rest = self.decode(first, steps - 1) if steps > 1 else \
+            np.zeros((prompts.shape[0], 0), np.int32)
+        return np.concatenate([np.asarray(first)[:, None], rest], axis=1)

@@ -1,0 +1,92 @@
+"""Type conversion (paper §3.2, Table 2) + tail predication (Listing 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks, vtypes
+from repro.core.vtypes import LVec, TARGET, neon_type_table, tile_for
+
+
+def test_neon_table_complete():
+    """Every NEON type from the paper's Table 2 maps on the TPU target."""
+    table = neon_type_table()
+    assert len(table) == 22
+    for name, tm in table.items():
+        assert tm.valid, name
+        # the paper's rule: physical width >= logical width
+        assert tm.padded_elems >= tm.logical.elems
+
+
+def test_table2_vla_rule():
+    """Reproduce Table 2's vlen-dependent validity for RVV targets."""
+    for vlen in (32, 64, 128):
+        for name, (shape, dtype) in vtypes._NEON_TYPES.items():
+            lv = LVec(shape, dtype)
+            ok = vlen >= lv.bits
+            # paper: 64-bit types need vlen>=64, 128-bit need vlen>=128
+            if lv.bits == 64:
+                assert ok == (vlen >= 64)
+            if lv.bits == 128:
+                assert ok == (vlen >= 128)
+
+
+def test_tile_alignment():
+    tm = tile_for(LVec((100, 100), jnp.float32))
+    assert tm.physical == (104, 128)
+    tm = tile_for(LVec((100, 100), jnp.bfloat16))
+    assert tm.physical == (112, 128)
+    tm = tile_for(LVec((100, 100), jnp.int8))
+    assert tm.physical == (128, 128)
+    tm = tile_for(LVec((100, 100), jnp.float32), mxu=True)
+    assert tm.physical == (128, 128)
+
+
+def test_vreg_elems():
+    assert TARGET.vreg_elems(jnp.float32) == 1024
+    assert TARGET.vreg_elems(jnp.bfloat16) == 2048
+    assert TARGET.vreg_elems(jnp.int8) == 4096
+
+
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 30))
+@settings(max_examples=40, deadline=None)
+def test_masked_store_preserves_tail(rows, cols, extra):
+    """The Listing-4 property: a predicated store writes exactly the
+    logical extent; memcpy-of-union semantics would clobber the tail."""
+    padded = (rows + extra, cols + extra)
+    dst = np.full(padded, 7.0, np.float32)
+    src = np.full(padded, 1.0, np.float32)
+    out = np.asarray(masks.masked_store(jnp.asarray(dst), jnp.asarray(src),
+                                        (rows, cols)))
+    assert (out[:rows, :cols] == 1.0).all()
+    assert (out[rows:, :] == 7.0).all()
+    assert (out[:, cols:] == 7.0).all()
+
+
+@given(st.integers(1, 17), st.integers(1, 17))
+@settings(max_examples=30, deadline=None)
+def test_pad_unpad_roundtrip(r, c):
+    x = np.random.default_rng(0).normal(size=(r, c)).astype(np.float32)
+    tm = tile_for(LVec((r, c), jnp.float32))
+    xp = masks.pad_to(jnp.asarray(x), tm.physical)
+    assert xp.shape == tm.physical
+    back = masks.unpad(xp, (r, c))
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+def test_masked_reduction_identity():
+    """Reductions over padded tiles must use the mask (vl semantics)."""
+    x = jnp.ones((3, 5), jnp.float32)
+    tm = tile_for(LVec((3, 5), jnp.float32))
+    xp = masks.pad_to(x, tm.physical)
+    naive = float(jnp.sum(xp))           # counts garbage lanes (zeros here)
+    masked = float(jnp.sum(masks.masked_select(xp, tm, 0.0)))
+    assert masked == 15.0
+    mx = float(jnp.max(masks.masked_select(
+        masks.pad_to(-2 * x, tm.physical), tm, -jnp.inf)))
+    assert mx == -2.0  # unmasked max would return the 0 padding
+
+
+def test_vmem_fit():
+    assert vtypes.vmem_fit([(1024 * 1024, jnp.float32)])
+    assert not vtypes.vmem_fit([(16 * 1024 * 1024, jnp.float32)])

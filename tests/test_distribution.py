@@ -1,0 +1,169 @@
+"""Distribution: sharding specs, small-mesh dry-run (subprocess so the
+512/8-device XLA flag never leaks into this process), compressed psum."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import model as M
+from repro.models import sharding as Sh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = {**ENV,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}"}
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_param_pspecs_cover_all_archs():
+    """Every parameter gets a spec whose rank fits, with valid axes."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        params_sds = jax.eval_shape(
+            lambda c=cfg: M.init(c, jax.random.PRNGKey(0)))
+        specs = Sh.param_pspecs(params_sds, cfg, mesh)
+        flat_p = jax.tree.leaves(params_sds)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+        assert len(flat_p) == len(flat_s)
+        for p, s in zip(flat_p, flat_s):
+            assert len(s) <= len(p.shape), (arch, p.shape, s)
+
+
+def test_fit_spec_drops_oversized_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+    # 'model' of size 1 always fits; build a fake larger mesh via shape math
+    s = Sh.fit_spec(P("model", None), (8, 4), mesh)
+    assert s == P("model")  # trailing None trimmed, size-1 axis fits
+
+
+def test_small_mesh_dryrun_train():
+    """4x2 mesh end-to-end lower+compile of a reduced arch train step."""
+    code = """
+import jax, jax.numpy as jnp, json
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.models import model as M, sharding as Sh
+from repro.train.loop import make_train_step, TrainConfig
+from repro.optim import adamw
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_config("gemma2-2b").reduced()
+params_sds = jax.eval_shape(lambda: M.init(cfg, jax.random.PRNGKey(0)))
+pspecs = Sh.param_pspecs(params_sds, cfg, mesh)
+opt_sds = jax.eval_shape(adamw.init, params_sds)
+ospecs = {"m": Sh.opt_pspecs(params_sds, cfg, mesh),
+          "v": Sh.opt_pspecs(params_sds, cfg, mesh),
+          "master": Sh.opt_pspecs(params_sds, cfg, mesh), "step": P()}
+batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+         "targets": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+bspec = {k: P(("data",), None) for k in batch}
+step = make_train_step(cfg, TrainConfig(accum=2), mesh)
+fn = lambda p, o, b: step(p, o, None, b)[:2]
+jfn = jax.jit(fn, in_shardings=(Sh.ns(mesh, pspecs), Sh.ns(mesh, ospecs),
+                                Sh.ns(mesh, bspec)),
+              out_shardings=(Sh.ns(mesh, pspecs), Sh.ns(mesh, ospecs)))
+with mesh:
+    lowered = jfn.lower(params_sds, opt_sds, batch)
+compiled = lowered.compile()
+print(json.dumps({"ok": True,
+                  "devices": len(jax.devices()),
+                  "flops": compiled.cost_analysis().get("flops", 0)}))
+"""
+    out = json.loads(_run(code).strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 8
+
+
+def test_small_mesh_actually_runs_sharded():
+    """Numerically execute one sharded (data-parallel) train step and
+    compare the loss with the single-device run (same batch/params).
+
+    Note: model-parallel *execution* (and buffer donation) on the
+    XLA:CPU backend starves its collective-permute rendezvous on this
+    1-core container (threads time out after 40s), so the TP axis and
+    donation are validated at compile/partition level
+    (test_small_mesh_dryrun_train + the 512-device dry-run) and numerics
+    are validated on the DP axis without donation here.
+    """
+    code = """
+import jax, jax.numpy as jnp, json
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.models import model as M, sharding as Sh
+from repro.train.loop import make_train_step, TrainConfig
+from repro.optim import adamw
+from repro.data.pipeline import SyntheticLM
+cfg = get_config("gemma2-2b").reduced().replace(dtype="float32", n_layers=2)
+params = M.init(cfg, jax.random.PRNGKey(0))
+opt = adamw.init(params)
+batch = SyntheticLM(cfg.vocab_size, 16, 4).batch(0)
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+pspecs = Sh.param_pspecs(params, cfg, mesh)
+ospecs = {"m": Sh.opt_pspecs(params, cfg, mesh), "v": Sh.opt_pspecs(params, cfg, mesh),
+          "master": Sh.opt_pspecs(params, cfg, mesh), "step": P()}
+bspec = {k: P(("data",), None) for k in batch}
+step = make_train_step(cfg, TrainConfig(accum=1), mesh)
+jfn = jax.jit(lambda p,o,b: step(p,o,None,b)[3],
+              in_shardings=(Sh.ns(mesh,pspecs), Sh.ns(mesh,ospecs), Sh.ns(mesh,bspec)))
+params_sh = Sh.shard_params(params, cfg=cfg, mesh=mesh) if False else Sh.shard_params(params, mesh, cfg)
+opt_sh = jax.device_put(opt, Sh.ns(mesh, ospecs))
+with mesh:
+    m = jax.block_until_ready(jfn(params_sh, opt_sh, batch))
+step1 = jax.jit(make_train_step(cfg, TrainConfig(accum=1)))
+m1 = step1(params, opt, None, batch)[3]
+print(json.dumps({"sharded": float(m["loss"]), "single": float(m1["loss"])}))
+"""
+    out = json.loads(_run(code, devices=2).strip().splitlines()[-1])
+    np.testing.assert_allclose(out["sharded"], out["single"], rtol=1e-4)
+
+
+def test_compressed_psum_shard_map():
+    """The int8 cross-pod collective: psum of quantized grads over 'pod'."""
+    code = """
+import jax, jax.numpy as jnp, json, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.optim.compression import compressed_psum
+mesh = jax.make_mesh((8,), ("pod",))
+x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16) / 37.0
+f = shard_map(lambda v: compressed_psum(v[0], "pod")[None],
+              mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None))
+got = f(x)
+want = jnp.mean(x, axis=0)
+err = float(jnp.max(jnp.abs(got[0] - want)))
+rng = float(jnp.max(jnp.abs(want)))
+print(json.dumps({"err": err, "range": rng}))
+"""
+    out = json.loads(_run(code).strip().splitlines()[-1])
+    # int8 quantization error bound: ~range/127
+    assert out["err"] <= out["range"] / 64
+
+
+def test_multipod_mesh_axes():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, json
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+m2 = make_production_mesh(multi_pod=True)
+print(json.dumps({"single": [m1.axis_names, list(m1.devices.shape)],
+                  "multi": [m2.axis_names, list(m2.devices.shape)]}))
+"""
+    out = json.loads(_run(code).strip().splitlines()[-1])
+    assert out["single"] == [["data", "model"], [16, 16]]
+    assert out["multi"] == [["pod", "data", "model"], [2, 16, 16]]

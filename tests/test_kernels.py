@@ -1,0 +1,177 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (conv, elementwise as ew, flash_attention as fa,
+                           gemm as gk, ibilinear as ib, pooling, ref,
+                           ssd as ssdk)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (100, 200, 60),
+                                   (7, 5, 9), (256, 512, 128), (1, 1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(m, k, n, dtype):
+    a, b = rand((m, k), dtype), rand((k, n), dtype, 1)
+    bias = rand((n,), dtype, 2)
+    got = gk.gemm(a, b, bias, clamp_min=-2.0, clamp_max=2.0, interpret=True)
+    want = ref.gemm(a, b, bias, clamp_min=-2.0, clamp_max=2.0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("shape", [(127,), (8, 130), (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_elementwise_sweep(shape, dtype):
+    x = rand(shape, dtype, 3, scale=3.0)
+    for pal, oracle, kw in [
+            (ew.vtanh, ref.vtanh, {}),
+            (ew.vsigmoid, ref.vsigmoid, {}),
+            (ew.vrelu, ref.vrelu, dict(clamp_min=0.0, clamp_max=1.5))]:
+        got = pal(x, interpret=True, **{k: v for k, v in kw.items()})
+        want = oracle(x, **kw)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+    xs = jnp.abs(x).astype(dtype) + jnp.asarray(0.01, dtype)
+    np.testing.assert_allclose(
+        np.asarray(ew.vsqrt(xs, interpret=True), np.float32),
+        np.asarray(ref.vsqrt(xs), np.float32), **TOL[dtype])
+
+
+def test_vsqrt_edge_cases():
+    x = jnp.asarray([0.0, 1e-30, 1e30, np.inf], jnp.float32)
+    got = np.asarray(ew.vsqrt(x, interpret=True))
+    np.testing.assert_allclose(got, [0.0, 1e-15, 1e15, np.inf], rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape,window", [((2, 12, 16, 8), (2, 2)),
+                                          ((1, 9, 9, 4), (3, 3)),
+                                          ((1, 13, 11, 3), (2, 2))])
+def test_maxpool_sweep(shape, window):
+    x = rand(shape)
+    got = pooling.maxpool(x, window, interpret=True)
+    want = ref.maxpool(x, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape,window", [((2, 8, 8, 4), (2, 2)),
+                                          ((1, 9, 6, 2), (3, 2))])
+def test_argmaxpool_sweep(shape, window):
+    x = rand(shape)
+    gm, gi = pooling.argmaxpool(x, window, interpret=True)
+    wm, wi = ref.argmaxpool(x, window)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@pytest.mark.parametrize("stride", [(1, 1), (2, 2)])
+@pytest.mark.parametrize("kh,kw", [(3, 3), (1, 1)])
+def test_conv_hwc_sweep(stride, kh, kw):
+    x = rand((2, 10, 12, 8))
+    w = rand((kh, kw, 8, 16), seed=1, scale=0.2)
+    b = rand((16,), seed=2)
+    got = conv.conv_hwc(x, w, b, stride, interpret=True)
+    want = ref.conv_hwc(x, w, b, stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv():
+    x = rand((2, 10, 12, 16))
+    w = rand((3, 3, 16), seed=1, scale=0.3)
+    b = rand((16,), seed=2)
+    got = conv.dwconv(x, w, b, interpret=True)
+    want = ref.dwconv(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ibilinear():
+    img = rand((20, 24, 8))
+    p = 23
+    iy = jax.random.randint(jax.random.PRNGKey(1), (p,), 0, 19)
+    ix = jax.random.randint(jax.random.PRNGKey(2), (p,), 0, 23)
+    wy = jax.random.uniform(jax.random.PRNGKey(3), (p,))
+    wx = jax.random.uniform(jax.random.PRNGKey(4), (p,))
+    got = ib.ibilinear(img, iy, ix, wy, wx, interpret=True)
+    want = ref.ibilinear(img, iy, ix, wy, wx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(window=32), dict(softcap=20.0),
+                                dict(causal=False)])
+def test_flash_attention(kw):
+    b, h, hkv, s, d = 1, 4, 2, 128, 64
+    q = rand((b, h, s, d))
+    k = rand((b, hkv, s, d), seed=1)
+    v = rand((b, hkv, s, d), seed=2)
+    got = fa.flash_attention(q, k, v, bq=64, bk=64, interpret=True, **kw)
+    want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3),
+                         **kw).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_ragged_lengths():
+    b, h, hkv, s, d = 3, 4, 2, 192, 32
+    q = rand((b, h, 1, d))
+    k = rand((b, hkv, s, d), seed=1)
+    v = rand((b, hkv, s, d), seed=2)
+    lengths = jnp.asarray([1, 100, 192], jnp.int32)
+    got = fa.decode_attention(q, k, v, lengths, bk=64, interpret=True)
+    for i, L in enumerate([1, 100, 192]):
+        want = ref.attention(
+            q[i:i + 1].transpose(0, 2, 1, 3),
+            k[i:i + 1, :, :L].transpose(0, 2, 1, 3),
+            v[i:i + 1, :, :L].transpose(0, 2, 1, 3),
+            causal=False).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                   np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 32), (100, 32), (37, 64)])
+def test_ssd_kernel(s, chunk):
+    ks = jax.random.split(KEY, 6)
+    b, h, p, g, n = 2, 4, 16, 2, 32
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jax.random.normal(ks[5], (h,)) * 0.1
+    got = ssdk.ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    want = ref.ssd(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+    # the pure-jnp chunked variant must agree too
+    got2 = ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_attention_chunked_matches_ref():
+    b, h, hkv, s, d = 2, 4, 2, 96, 32
+    q = rand((b, s, h, d))
+    k = rand((b, s, hkv, d), seed=1)
+    v = rand((b, s, hkv, d), seed=2)
+    for kw in [dict(), dict(window=17), dict(softcap=10.0),
+               dict(causal=False)]:
+        got = ref.attention_chunked(q, k, v, q_chunk=32, **kw)
+        want = ref.attention(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
