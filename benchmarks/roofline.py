@@ -23,7 +23,7 @@ import json
 import math
 import os
 
-from repro.core.vtypes import TARGET
+from repro.core.targets import compile_target, current_target
 from repro.configs import SHAPES, get_config
 
 
@@ -42,7 +42,7 @@ def model_flops(arch: str, shape_name: str, accum_meta=None) -> float:
     return 2.0 * active * shape.global_batch
 
 
-def memory_bytes(rec, target=TARGET) -> float:
+def memory_bytes(rec) -> float:
     """Analytic per-device HBM traffic per step (fused-quality lowering).
 
     The HLO-text byte count models a fully *unfused* op-by-op program
@@ -128,9 +128,14 @@ def memory_bytes(rec, target=TARGET) -> float:
     return traffic
 
 
-def terms(rec, target=TARGET):
+def terms(rec, target=None):
+    target = target or current_target()
+    if target.peak_flops_bf16 <= 0:
+        # RVV cost models carry no machine peaks; the roofline is a
+        # TPU-side report, so fall back to the compile target.
+        target = compile_target()
     comp = rec["flops"] / target.peak_flops_bf16
-    mem = memory_bytes(rec, target) / target.hbm_bw
+    mem = memory_bytes(rec) / target.hbm_bw
     coll = rec["collective_total"] / target.ici_bw
     dom = max(("compute", comp), ("memory", mem), ("collective", coll),
               key=lambda kv: kv[1])

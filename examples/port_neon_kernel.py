@@ -56,7 +56,7 @@ np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 print("vcnt: customized lowering matches the generic oracle on 4096 lanes")
 
 # --- 4. measure (dynamic instruction counts, both cost targets) -----------
-for target, label in ((trace.RVV128, "RVV-128"), (trace.TARGET, "TPU v5e")):
+for target, label in (("rvv-128", "RVV-128"), ("tpu-v5e", "TPU v5e")):
     with trace.cost_target(target):
         with trace.count() as c_base:
             with use_policy("generic"):

@@ -29,7 +29,7 @@ np.testing.assert_allclose(np.asarray(outs["vector"]),
 print("all lowering tiers agree on vtanh")
 
 # --- 3. dynamic instruction counts (the paper's Spike methodology) --------
-with trace.cost_target(trace.RVV128):      # the paper's vector width
+with trace.cost_target("rvv-128"):         # the paper's vector width
     base = trace.jaxpr_vector_instrs(lambda v: jnp.tanh(v), x,
                                      scalarize=True, union_overhead=True)
     with trace.count() as c:

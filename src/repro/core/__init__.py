@@ -1,17 +1,23 @@
 """repro.core — the paper's contribution as a composable JAX feature.
 
 A portability layer that maps a fixed-width logical vector ISA (NEON
-semantics) onto the TPU vector machine through a ladder of lowerings
-(generic / vector / customized-pallas), with explicit type-tiling and
-tail predication.  See DESIGN.md §2-3 for the NEON->RVV => logical->TPU
-adaptation mapping.
+semantics) onto a target vector machine through a set of lowerings
+(generic / vector / customized-pallas) chosen per (op, shape, dtype,
+target) by evaluated instruction cost, with explicit type-tiling and
+tail predication.  See DESIGN.md §2-4 for the NEON->RVV => logical->TPU
+adaptation mapping and the cost-driven selector.
 """
-from . import isa, masks, registry, trace, vtypes
-from .registry import REGISTRY, dispatch, register, select, use_policy
-from .vtypes import TARGET, LVec, TileMap, TPUTarget, neon_type_table, tile_for
+from . import isa, masks, registry, targets, trace, vtypes
+from .registry import (REGISTRY, dispatch, explain, register, select,
+                       use_policy)
+from .targets import (Target, compile_target, current_target, get_target,
+                      set_default_target, use_target)
+from .vtypes import LVec, TileMap, neon_type_table, tile_for
 
 __all__ = [
-    "isa", "masks", "registry", "trace", "vtypes",
-    "REGISTRY", "dispatch", "register", "select", "use_policy",
-    "TARGET", "LVec", "TileMap", "TPUTarget", "neon_type_table", "tile_for",
+    "isa", "masks", "registry", "targets", "trace", "vtypes",
+    "REGISTRY", "dispatch", "explain", "register", "select", "use_policy",
+    "Target", "compile_target", "current_target", "get_target",
+    "set_default_target", "use_target",
+    "LVec", "TileMap", "neon_type_table", "tile_for",
 ]

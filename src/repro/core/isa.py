@@ -207,9 +207,11 @@ def vfma(acc, a, b):
 
 @register("vget_high", "generic", cost=scalar_cost())
 def _vgh_g(a):
+    # Shape-generic upper-half slice (scalar-loop semantics).  The old
+    # vmap(...).T formulation transposed *all* leading axes, which is
+    # wrong for ndim > 2.
     n = a.shape[-1]
-    return jax.vmap(lambda i: a[..., n // 2 + i])(jnp.arange(n // 2)).T \
-        if a.ndim > 1 else a[n // 2:]
+    return a[..., n // 2:]
 
 
 @register("vget_high", "pallas", cost=vector_cost(1),
@@ -234,7 +236,14 @@ def vget_low(a):
     return dispatch("vget_low", a)
 
 
-@register("vcombine", "vector", cost=vector_cost(2))
+def _combined_width(a, b, *_, **__):
+    # result register is the two operands combined (D+D -> Q): the
+    # Table-2 rule must see the *output* width, not the inputs'.
+    return min(128, 2 * a.size * jnp.dtype(a.dtype).itemsize * 8)
+
+
+@register("vcombine", "vector", cost=vector_cost(2), width=_combined_width)
+@register("vcombine", "generic", cost=scalar_cost(1))
 def _vcomb(a, b):
     return jnp.concatenate([a, b], axis=-1)
 
@@ -382,7 +391,8 @@ def vcvt(a, dtype):
     return dispatch("vcvt", a, dtype)
 
 
-@register("vzip", "pallas", cost=vector_cost(2), doc="interleave via vrgather")
+@register("vzip", "pallas", cost=vector_cost(2), width=_combined_width,
+          doc="interleave via vrgather")
 @register("vzip", "generic", cost=scalar_cost(2))
 def _vzip(a, b):
     return jnp.stack([a, b], axis=-1).reshape(a.shape[:-1] + (2 * a.shape[-1],))

@@ -1,32 +1,53 @@
-"""Lowering registry — the SIMDe conversion ladder as a framework feature.
+"""Lowering registry — cost-driven, target-aware selection.
 
 SIMDe selects an implementation per intrinsic with a compile-time
 preprocessor ladder (paper Listing 2): native ISA intrinsic, else vector
 builtins, else vector-attribute ops, else auto-vectorized scalar loop.
-The paper's contribution is adding *customized RVV lowerings* at the top
-of that ladder and showing they beat the generic tiers by 1.5-5.1x.
+The paper's actual contribution is *choosing* the customized RVV
+conversion per function by analyzing the generated code against the
+target's vector architecture — the ladder is only the candidate set.
 
-Here the ladder is a runtime registry consulted at trace time, so the
-choice is burned into the jaxpr (zero execution overhead — the JAX
-analogue of a zero-cost ``#if``):
+This registry implements that choice as a runtime feature consulted at
+trace time (the decision is burned into the jaxpr, so dispatch has zero
+execution overhead — the JAX analogue of a zero-cost ``#if``):
 
-  tier 'pallas'  — customized TPU kernel (paper: customized RVV intrinsics)
-  tier 'vector'  — jnp whole-array ops   (paper: vector attributes / builtins)
+  tier 'pallas'  — customized kernel   (paper: customized RVV intrinsics)
+  tier 'vector'  — jnp whole-array ops (paper: vector attributes/builtins)
   tier 'generic' — scalar-semantics emulation, always valid
                    (paper: auto-vectorized scalar loop; also the oracle)
 
-``policy`` selects the *maximum* tier, so ``use_policy('vector')``
-reproduces original SIMDe (no customized conversions) and the default
-reproduces the paper's enhanced SIMDe.  Each lowering declares a
-``supports`` predicate (the paper's "vlen >= width" validity rule) and an
-instruction-cost model consumed by :mod:`repro.core.trace`.
+Selection (:meth:`_Registry.select`):
+
+  1. candidates = registered lowerings with tier rank <= the policy cap
+     (``use_policy('vector')`` therefore still reproduces the
+     original-SIMDe baseline: customized conversions excluded);
+  2. a non-generic candidate is valid only if its ``supports`` predicate
+     holds *and* the target can hold the op's fixed-width logical
+     register (the paper's ``vlen >= width`` Table-2 rule — on a VLA
+     target with a short register, vector tiers fall away and the scalar
+     loop remains, exactly the paper's 'x' entries);
+  3. each valid candidate's declared ``cost(*args)`` is evaluated under
+     the active target and the cheapest wins; tier rank is only the
+     tie-break (higher — more specialized — first).
+
+Selections are memoized on (op, abstract shapes/dtypes, policy, target)
+so jit-traced dispatch stays zero-overhead even with jaxpr-analyzing
+cost models.  :meth:`_Registry.explain` returns the full per-candidate
+report — the paper's analysis tables as a feature.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import threading
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from . import targets as _targets
+
+log = logging.getLogger(__name__)
 
 TIERS = ("generic", "vector", "pallas")
 _TIER_RANK = {t: i for i, t in enumerate(TIERS)}
@@ -37,10 +58,16 @@ class Lowering:
     op: str
     tier: str
     fn: Callable
-    # instruction-cost model: (*args, **kw) -> int dynamic vector-instr count.
+    # instruction-cost model: (*args, **kw) -> int dynamic vector-instr
+    # count under the *active* target (targets.current_target()).
     cost: Optional[Callable] = None
-    # validity predicate, the "vlen >= logical width" rule analogue.
+    # validity predicate, e.g. shape/dtype/scratch-budget constraints.
     supports: Optional[Callable] = None
+    # fixed-width logical register this lowering manipulates, for the
+    # Table-2 vlen>=width rule: an int (bits) or (*args, **kw)->bits.
+    # None = infer from the widest array operand.  Ops whose *result*
+    # widens past their inputs (vcombine, vzip) must declare this.
+    width: Optional[Any] = None
     doc: str = ""
 
     def ok(self, *args, **kw) -> bool:
@@ -52,25 +79,91 @@ class Lowering:
             return False
 
 
+@dataclasses.dataclass
+class Candidate:
+    """One row of an explain() report."""
+    lowering: Lowering
+    valid: bool
+    width_ok: bool
+    cost: Optional[int]
+    chosen: bool = False
+    note: str = ""
+
+    @property
+    def tier(self) -> str:
+        return self.lowering.tier
+
+
+def _logical_width_bits(args) -> Optional[int]:
+    """Width of the fixed-width logical register an op manipulates:
+    the *widest* array operand, saturated at NEON Q-register width.
+
+    Tensor-granularity ops strip-mine at Q-register granularity, so the
+    requirement saturates at 128 bits; smaller operands (D registers)
+    only need their own width — reproducing Table 2's rows.  Lowerings
+    whose result is wider than every operand declare ``width=``
+    explicitly at registration.
+    """
+    widest = None
+    for a in args:
+        if hasattr(a, "shape") and hasattr(a, "dtype"):
+            try:
+                n = int(np.prod(a.shape)) if len(a.shape) else 1
+                bits = n * np.dtype(a.dtype).itemsize * 8
+            except Exception:
+                return None
+            widest = bits if widest is None else max(widest, bits)
+    return None if widest is None else min(128, widest)
+
+
+_UNCACHEABLE = object()
+
+
+def _akey(v) -> Any:
+    """Abstract cache key for one argument: arrays by shape/dtype,
+    scalars by value; unhashables poison the key (selection still works,
+    it just isn't memoized)."""
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        try:
+            return ("#arr", tuple(v.shape), str(v.dtype))
+        except Exception:
+            return _UNCACHEABLE
+    if isinstance(v, (tuple, list)):
+        sub = tuple(_akey(u) for u in v)
+        return _UNCACHEABLE if _UNCACHEABLE in sub else ("#seq",) + sub
+    try:
+        hash(v)
+    except TypeError:
+        return _UNCACHEABLE
+    return v
+
+
 class _Registry:
     def __init__(self):
         self._ops: Dict[str, Dict[str, Lowering]] = {}
         self._tls = threading.local()
         self._default = "pallas"
+        # key -> (lowering, evaluated cost) — see _select_entry
+        self._cache: Dict[Tuple, Tuple[Lowering, Optional[int]]] = {}
+        self._hits = 0
+        self._misses = 0
 
     # -- registration -------------------------------------------------------
-    def register(self, op: str, tier: str, *, cost=None, supports=None, doc=""):
+    def register(self, op: str, tier: str, *, cost=None, supports=None,
+                 width=None, doc=""):
         if tier not in TIERS:
             raise ValueError(f"unknown tier {tier!r}")
 
         def deco(fn):
             self._ops.setdefault(op, {})[tier] = Lowering(
-                op=op, tier=tier, fn=fn, cost=cost, supports=supports, doc=doc)
+                op=op, tier=tier, fn=fn, cost=cost, supports=supports,
+                width=width, doc=doc)
+            self._cache.clear()
             return fn
 
         return deco
 
-    # -- policy -------------------------------------------------------------
+    # -- policy (a *cap* on the candidate tier set) -------------------------
     @property
     def policy(self) -> str:
         return getattr(self._tls, "policy", self._default)
@@ -91,25 +184,144 @@ class _Registry:
         finally:
             self._tls.policy = prev
 
-    # -- dispatch -----------------------------------------------------------
-    def select(self, op: str, *args, policy: Optional[str] = None, **kw) -> Lowering:
-        """Walk the ladder downward from the policy tier (Listing 2)."""
+    # -- cost evaluation ----------------------------------------------------
+    @staticmethod
+    def _eval_cost(low: Lowering, args, kw) -> Optional[int]:
+        if low.cost is None:
+            return None
+        try:
+            return int(low.cost(*args, **kw))
+        except Exception as e:
+            from . import trace  # local import to avoid cycle at init
+            trace.warn_cost_model(low, e, "treating cost as unknown")
+            return None
+
+    def _candidates(self, op: str, args, kw, policy: str,
+                    target: _targets.Target) -> List[Candidate]:
         tiers = self._ops.get(op)
         if not tiers:
             raise KeyError(f"no lowering registered for op {op!r}")
-        start = _TIER_RANK[policy or self.policy]
-        for rank in range(start, -1, -1):
-            low = tiers.get(TIERS[rank])
-            if low is not None and low.ok(*args, **kw):
-                return low
-        raise KeyError(f"no valid lowering for op {op!r} at policy "
-                       f"{policy or self.policy!r} with given args")
+        cap = _TIER_RANK[policy]
+        cands = []
+        # validity predicates AND cost models both read the active
+        # target (vmem_fit, vreg_for, ...) — evaluate every candidate
+        # under the *requested* target, not the ambient one, or the
+        # cache would memoize a selection made against the wrong machine.
+        with _targets.use_target(target):
+            for tier in TIERS[:cap + 1]:
+                low = tiers.get(tier)
+                if low is None:
+                    continue
+                width = (low.width(*args, **kw) if callable(low.width)
+                         else low.width) if low.width is not None \
+                    else _logical_width_bits(args)
+                width_ok = (tier == "generic" or width is None
+                            or target.supports_width(width))
+                valid = width_ok and low.ok(*args, **kw)
+                note = "" if width_ok else \
+                    f"vlen {target.vlen} < width {width}"
+                cost = self._eval_cost(low, args, kw) if valid else None
+                cands.append(Candidate(lowering=low, valid=valid,
+                                       width_ok=width_ok, cost=cost,
+                                       note=note))
+        return cands
 
-    def dispatch(self, op: str, *args, policy: Optional[str] = None, **kw):
-        low = self.select(op, *args, policy=policy, **kw)
+    @staticmethod
+    def _pick(cands: List[Candidate]) -> Optional[Candidate]:
+        valid = [c for c in cands if c.valid]
+        if not valid:
+            return None
+        costed = [c for c in valid if c.cost is not None]
+        if costed:
+            best = min(costed, key=lambda c: (c.cost,
+                                              -_TIER_RANK[c.tier]))
+        else:
+            best = max(valid, key=lambda c: _TIER_RANK[c.tier])
+        best.chosen = True
+        return best
+
+    # -- dispatch -----------------------------------------------------------
+    def _select_entry(self, op, args, kw, policy, target):
+        """Cache-aware selection: (lowering, evaluated cost).
+
+        The cost rides along so dispatch-time instruction counting
+        (trace.count) reuses the selection-time evaluation instead of
+        re-running a possibly jaxpr-tracing cost model per issue.
+        """
+        pol = policy or self.policy
+        if pol not in TIERS:
+            raise ValueError(f"unknown policy {pol!r}")
+        tgt = (_targets.current_target() if target is None
+               else _targets.get_target(target))
+        key = None
+        akeys = tuple(_akey(a) for a in args) + tuple(
+            sorted((k, _akey(v)) for k, v in kw.items()))
+        if _UNCACHEABLE not in akeys and not any(
+                isinstance(k, tuple) and _UNCACHEABLE in k for k in akeys):
+            # key on the Target *value* (frozen dataclass), not its name:
+            # an ad-hoc Target sharing a registered name must not collide.
+            key = (op, pol, tgt, akeys)
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._hits += 1
+                return hit
+        best = self._pick(self._candidates(op, args, kw, pol, tgt))
+        if best is None:
+            raise KeyError(f"no valid lowering for op {op!r} at policy "
+                           f"{pol!r} on target {tgt.name!r} with given args")
+        entry = (best.lowering, best.cost)
+        if key is not None:
+            self._misses += 1
+            self._cache[key] = entry
+        return entry
+
+    def select(self, op: str, *args, policy: Optional[str] = None,
+               target: Optional[Union[str, "_targets.Target"]] = None,
+               **kw) -> Lowering:
+        """Pick the cheapest valid lowering under the active target."""
+        return self._select_entry(op, args, kw, policy, target)[0]
+
+    def explain(self, op: str, *args, policy: Optional[str] = None,
+                target: Optional[Union[str, "_targets.Target"]] = None,
+                **kw) -> Dict:
+        """Per-candidate selection report (cost, validity, chosen tier) —
+        the paper's analysis tables as an API.  Uncached by design."""
+        pol = policy or self.policy
+        if pol not in TIERS:
+            raise ValueError(f"unknown policy {pol!r}")
+        tgt = (_targets.current_target() if target is None
+               else _targets.get_target(target))
+        cands = self._candidates(op, args, kw, pol, tgt)
+        best = self._pick(cands)
+        return {
+            "op": op,
+            "policy": pol,
+            "target": tgt.name,
+            "chosen": best.tier if best else None,
+            "chosen_cost": best.cost if best else None,
+            "candidates": [
+                {"tier": c.tier, "valid": c.valid, "width_ok": c.width_ok,
+                 "cost": c.cost, "chosen": c.chosen, "doc": c.lowering.doc,
+                 "note": c.note}
+                for c in cands],
+        }
+
+    def dispatch(self, op: str, *args, policy: Optional[str] = None,
+                 target: Optional[Union[str, "_targets.Target"]] = None,
+                 **kw):
+        low, cost = self._select_entry(op, args, kw, policy, target)
         from . import trace  # local import to avoid cycle
-        trace.record(low, *args, **kw)
+        trace.record(low, *args, cost=cost, **kw)
         return low.fn(*args, **kw)
+
+    # -- introspection ------------------------------------------------------
+    def cache_info(self) -> Dict[str, int]:
+        return {"hits": self._hits, "misses": self._misses,
+                "size": len(self._cache)}
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._hits = self._misses = 0
 
     def ops(self):
         return sorted(self._ops)
@@ -122,4 +334,5 @@ REGISTRY = _Registry()
 register = REGISTRY.register
 dispatch = REGISTRY.dispatch
 select = REGISTRY.select
+explain = REGISTRY.explain
 use_policy = REGISTRY.use_policy

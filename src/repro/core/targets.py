@@ -1,0 +1,172 @@
+"""First-class target descriptions and the active-target state.
+
+The paper's contribution is not a fixed conversion ladder but *choosing*
+the right lowering per function by analyzing generated code against the
+target's vector architecture (VLA, ``vlen >= width``).  That choice is
+target-parametric: the best lowering flips between vector widths.  This
+module makes the target a first-class, thread-scoped parameter consumed
+by the cost models (:mod:`repro.core.trace`), the selection engine
+(:mod:`repro.core.registry`), and the tile mapper
+(:mod:`repro.core.vtypes`).
+
+Two target families are registered:
+
+  * ``tpu-v5e`` / ``tpu-v6`` — fixed-tile machines (lane x sublane vregs,
+    MXU, VMEM budget); kernels are *compiled* for these.
+  * ``rvv-64`` .. ``rvv-1024`` — the paper's VLA RISC-V vector family.
+    ``vlen`` is the register width in bits; the Table-2 validity rule is
+    :meth:`Target.supports_width` (a fixed-width logical register maps
+    iff ``vlen >= width``).  ``has_vector_libm`` is False: the baseline
+    RVV toolchain scalarizes transcendental calls, which is why the
+    paper's vtanh/vsigmoid baselines are slow.
+
+``TARGET`` (the default, tpu-v5e) lives *only* here — every other module
+reads the active target through :func:`current_target` or receives it as
+an explicit parameter.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Union
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """Hardware constants consumed by lowering selection + cost models."""
+
+    name: str
+    kind: str = "tpu"               # "tpu" (fixed tiles) | "rvv" (VLA)
+    lane: int = 128                 # minor-most vector dimension (elements
+                                    # of fp32 for the rvv family)
+    mxu: int = 128                  # systolic tile; 1 = no matrix unit
+    vlen: int = 0                   # VLA register width in bits (rvv only)
+    vmem_bytes: Optional[int] = 16 * 2**20  # None = no scratch constraint
+    hbm_bytes: int = 16 * 2**30
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    has_vector_libm: bool = True    # False => transcendentals scalarize
+
+    # -- derived properties ---------------------------------------------------
+
+    @property
+    def vla(self) -> bool:
+        """Vector-length-agnostic register file (the paper's RVV model)."""
+        return self.kind == "rvv"
+
+    @property
+    def has_mxu(self) -> bool:
+        return self.mxu >= 8
+
+    def sublane(self, dtype) -> int:
+        """Native second-minor tiling for ``dtype`` (fp32:8 bf16:16 i8:32)."""
+        if self.vla:
+            return 1
+        itemsize = jnp.dtype(dtype).itemsize
+        return max(8, 32 // max(1, itemsize)) if itemsize < 4 else 8
+
+    def vreg_elems(self, dtype) -> int:
+        """Elements per vector register for ``dtype``.
+
+        TPU: sublane x lane physical tile.  RVV: ``vlen`` bits re-divided
+        by the element width (LMUL=1), exactly the paper's Table-2 type
+        mapping.
+        """
+        itemsize = jnp.dtype(dtype).itemsize
+        if self.vla:
+            return max(1, self.vlen // (8 * itemsize))
+        return self.sublane(dtype) * self.lane
+
+    def supports_width(self, bits: int) -> bool:
+        """The paper's substitution rule: a fixed-width logical register
+        maps onto this target iff the vector register can hold it
+        (``vlen >= width``).  Fixed-tile machines hold any NEON width."""
+        if self.vla:
+            return self.vlen >= bits
+        return True
+
+
+def _rvv(bits: int) -> Target:
+    return Target(name=f"rvv-{bits}", kind="rvv", lane=max(1, bits // 32),
+                  mxu=1, vlen=bits, vmem_bytes=None, hbm_bytes=0,
+                  peak_flops_bf16=0.0, hbm_bw=0.0, ici_bw=0.0,
+                  has_vector_libm=False)
+
+
+TARGETS: Dict[str, Target] = {}
+
+
+def register_target(t: Target) -> Target:
+    TARGETS[t.name] = t
+    return t
+
+
+# The default target.  Nothing outside this module imports the constant;
+# consumers go through current_target()/use_target().
+TARGET = register_target(Target(name="tpu-v5e"))
+register_target(Target(name="tpu-v6", vmem_bytes=32 * 2**20,
+                       hbm_bytes=32 * 2**30, peak_flops_bf16=918e12,
+                       hbm_bw=1640e9, ici_bw=90e9))
+for _bits in (64, 128, 256, 512, 1024):
+    register_target(_rvv(_bits))
+
+# The paper's evaluation family (Figure 2 sweeps these widths).
+RVV_FAMILY = ("rvv-128", "rvv-256", "rvv-512", "rvv-1024")
+
+
+def get_target(t: Union[str, Target]) -> Target:
+    if isinstance(t, Target):
+        return t
+    try:
+        return TARGETS[t]
+    except KeyError:
+        raise KeyError(f"unknown target {t!r}; known: {sorted(TARGETS)}")
+
+
+# ---------------------------------------------------------------------------
+# Active-target state (thread-scoped, like registry policy)
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+_default_target = TARGET
+
+
+def current_target() -> Target:
+    return getattr(_tls, "target", _default_target)
+
+
+def set_default_target(t: Union[str, Target]) -> None:
+    global _default_target
+    _default_target = get_target(t)
+
+
+@contextlib.contextmanager
+def use_target(t: Union[str, Target]):
+    """Scope the active target (accepts a name or a Target)."""
+    prev = getattr(_tls, "target", None)
+    _tls.target = get_target(t)
+    try:
+        yield _tls.target
+    finally:
+        if prev is None:
+            del _tls.target
+        else:
+            _tls.target = prev
+
+
+def compile_target() -> Target:
+    """The physical machine kernels are compiled for.
+
+    Pallas launch geometry (block shapes, VMEM scratch) always needs a
+    fixed-tile machine; when the *cost* target is a VLA RVV model, kernel
+    bodies still compile against the default TPU description (honoring
+    set_default_target when it names a TPU-kind machine).
+    """
+    t = current_target()
+    if t.kind == "tpu":
+        return t
+    return _default_target if _default_target.kind == "tpu" else TARGET

@@ -25,6 +25,7 @@ the compiled dry-run instead (see benchmarks/roofline.py).
 from __future__ import annotations
 
 import contextlib
+import logging
 import math
 import threading
 from collections import defaultdict
@@ -35,7 +36,9 @@ import jax.extend
 import jax.numpy as jnp
 import numpy as np
 
-from .vtypes import TARGET
+from .targets import current_target, use_target
+
+log = logging.getLogger(__name__)
 
 _tls = threading.local()
 
@@ -44,17 +47,37 @@ def _counts() -> Optional[Dict]:
     return getattr(_tls, "counts", None)
 
 
-def record(lowering, *args, **kw) -> None:
-    """Called by registry.dispatch for every op issue."""
+_cost_warned = set()
+
+
+def warn_cost_model(lowering, exc, consequence: str) -> None:
+    """Log a broken cost model once per (op, tier) — it is a real defect
+    in the selection data, not something to silently mask."""
+    key = (lowering.op, lowering.tier)
+    if key not in _cost_warned:
+        _cost_warned.add(key)
+        log.warning("cost model for %s/%s raised %r; %s (fix the model — "
+                    "selection quality depends on it)",
+                    lowering.op, lowering.tier, exc, consequence)
+
+
+def record(lowering, *args, cost=None, **kw) -> None:
+    """Called by registry.dispatch for every op issue.
+
+    ``cost`` is the count already evaluated (and memoized) at selection
+    time; when absent the lowering's model is evaluated here.
+    """
     c = _counts()
     if c is None:
         return
     n = 0
-    if lowering.cost is not None:
+    if cost is not None:
+        n = int(cost)
+    elif lowering.cost is not None:
         try:
             n = int(lowering.cost(*args, **kw))
-        except Exception:
-            n = 0
+        except Exception as e:
+            warn_cost_model(lowering, e, "counting 0")
     c["per_op"][(lowering.op, lowering.tier)] += n
     c["total"] += n
 
@@ -71,35 +94,17 @@ def count():
 
 
 # ---------------------------------------------------------------------------
-# Cost targets: the TPU target (default) and an RVV-128 model matching the
-# paper's evaluation vector width, switchable for the Figure-2 repro.
+# Cost targets come from repro.core.targets (tpu-v5e/tpu-v6 + the VLA
+# rvv-64..1024 family).  ``cost_target`` is the historical name for
+# scoping the active target during cost evaluation.
 # ---------------------------------------------------------------------------
 
-from .vtypes import TPUTarget
-
-RVV128 = TPUTarget(name="rvv-128", lane=4, mxu=1, vmem_bytes=0,
-                   hbm_bytes=0, peak_flops_bf16=0, hbm_bw=0, ici_bw=0)
-
-
-def current_target():
-    return getattr(_tls, "cost_target", TARGET)
-
-
-@contextlib.contextmanager
-def cost_target(target):
-    prev = current_target()
-    _tls.cost_target = target
-    try:
-        yield
-    finally:
-        _tls.cost_target = prev
+cost_target = use_target
 
 
 def vreg_for(dtype) -> int:
-    t = current_target()
-    if t.mxu <= 4:      # RVV-style: lane count scales with element width
-        return max(1, t.lane * (4 // max(1, jnp.dtype(dtype).itemsize)))
-    return t.vreg_elems(dtype)
+    """Elements per vector register for ``dtype`` on the active target."""
+    return current_target().vreg_elems(dtype)
 
 
 # scalar libm call costs (instructions per element) when the baseline
@@ -118,23 +123,68 @@ def _elems(x) -> int:
     return int(np.prod(jnp.shape(x))) if jnp.ndim(x) else 1
 
 
+def _arrays(args):
+    return [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
+
+
 def scalar_cost(ops_per_elem: int = 1):
     """Generic-tier cost: the scalar loop retires one instr per element op
-    (what you get when auto-vectorization fails, e.g. libm calls)."""
+    (what you get when auto-vectorization fails, e.g. libm calls).
+
+    Scalar (non-array) operands — e.g. ``vdup`` of a Python float — count
+    as a single element rather than raising.
+    """
 
     def cost(*args, **kw):
-        return ops_per_elem * max(_elems(a) for a in args if hasattr(a, "shape"))
+        elems = [_elems(a) for a in _arrays(args)]
+        return ops_per_elem * (max(elems) if elems else 1)
 
     return cost
 
 
 def vector_cost(ops_per_vec: int = 1):
-    """Vector-tier cost: whole-register ops, ceil(elems / vreg_elems)."""
+    """Vector-tier cost: whole-register ops, ceil(elems / vreg_elems).
+
+    With no array operand (a pure-scalar issue like ``vdup`` of a Python
+    float) the op still retires one whole-register instruction.
+    """
 
     def cost(*args, **kw):
-        arrs = [a for a in args if hasattr(a, "shape") and hasattr(a, "dtype")]
+        arrs = _arrays(args)
+        if not arrs:
+            return ops_per_vec
         n = max(_elems(a) for a in arrs)
         return ops_per_vec * math.ceil(n / vreg_for(arrs[0].dtype))
+
+    return cost
+
+
+def traced_cost(fn, *, union_overhead: bool = True,
+                transcendental: bool = False):
+    """Cost model that *analyzes the lowering's generated code* (its
+    jaxpr) against the active target — the paper's §4 methodology as a
+    first-class cost model for the jnp-level tiers.
+
+    ``union_overhead``: the original-SIMDe generic-union memory
+    round-trip per op (paper §3.2 / Listing 4) — charged only on VLA
+    targets, where the SIMDe flow actually materializes the union; a
+    fusing compiler (XLA on TPU) optimizes the round-trip away, and the
+    TPU column of the benchmark uses the same un-overheaded counts.
+    ``transcendental``: on targets without a vector libm (the baseline
+    RVV toolchain) the prim scalarizes — why the paper's vtanh/vsigmoid
+    baselines are slowest.
+
+    The jaxpr trace is cheap (abstract, no compile) and the registry
+    memoizes selections per (op, shapes, policy, target), so jit-traced
+    dispatch stays zero-overhead.
+    """
+
+    def cost(*args, **kw):
+        tgt = current_target()
+        scalarize = transcendental and not tgt.has_vector_libm
+        ovh = union_overhead and tgt.vla
+        return jaxpr_vector_instrs(fn, *args, scalarize=scalarize,
+                                   union_overhead=ovh, **kw)
 
     return cost
 
@@ -192,7 +242,7 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
             a = eqn.invars[0].aval
             dims = eqn.params["dimension_numbers"]
             k = int(np.prod([a.shape[i] for i in dims[0][0]]))
-            if tgt.mxu >= 8:   # systolic macro-ops
+            if tgt.has_mxu:    # systolic macro-ops
                 total += math.ceil(n / (tgt.mxu * tgt.mxu)) * \
                     math.ceil(k / tgt.mxu)
             else:              # vfma ladder (+ union loads on baseline)
@@ -203,7 +253,7 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
             rhs = eqn.invars[1].aval
             k_total = int(np.prod(rhs.shape[:-1]))
             groups = eqn.params.get("feature_group_count", 1)
-            if tgt.mxu >= 8 and groups == 1:    # depthwise can't use MXU
+            if tgt.has_mxu and groups == 1:     # depthwise can't use MXU
                 total += math.ceil(n / (tgt.mxu * tgt.mxu)) * \
                     math.ceil(k_total / tgt.mxu)
             else:
@@ -214,7 +264,7 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
             total += ovh * win * math.ceil(n / vreg)
         elif name in ("gather", "scatter", "scatter-add", "scatter_add"):
             # no per-lane vector gather; TPU moves (sublane,128) rows
-            gran = 8 if tgt.mxu >= 8 else 1
+            gran = 8 if tgt.has_mxu else 1
             total += max(1, n // gran)
         elif name in ("sort", "top_k"):
             total += ovh * math.ceil(n * max(1, int(np.log2(max(2, n))))

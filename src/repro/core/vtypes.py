@@ -21,40 +21,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-# ---------------------------------------------------------------------------
-# TPU target description (v5e). Peaks are used by the roofline model too.
-# ---------------------------------------------------------------------------
+from .targets import Target, current_target, get_target
+
+# Target descriptions live in repro.core.targets; the active one is
+# thread-scoped.  A ``target=None`` parameter below means "the active
+# target" — callers may also pass a Target or a registered name.
 
 
-@dataclasses.dataclass(frozen=True)
-class TPUTarget:
-    """Hardware constants for the lowering + roofline layers."""
-
-    name: str = "tpu-v5e"
-    lane: int = 128                 # minor-most vector dimension
-    mxu: int = 128                  # MXU systolic tile (128x128)
-    vmem_bytes: int = 16 * 2**20    # usable VMEM budget per core
-    hbm_bytes: int = 16 * 2**30     # HBM per chip
-    peak_flops_bf16: float = 197e12  # FLOP/s
-    hbm_bw: float = 819e9           # B/s
-    ici_bw: float = 50e9            # B/s per link
-
-    def sublane(self, dtype) -> int:
-        """Native second-minor tiling for ``dtype`` (fp32:8 bf16:16 i8:32)."""
-        itemsize = jnp.dtype(dtype).itemsize
-        return max(8, 32 // max(1, itemsize)) if itemsize < 4 else 8
-
-    def vreg_elems(self, dtype) -> int:
-        """Elements per vector register for ``dtype``."""
-        return self.sublane(dtype) * self.lane
-
-
-TARGET = TPUTarget()
+def _resolve(target: Optional[Union[str, Target]]) -> Target:
+    return current_target() if target is None else get_target(target)
 
 
 def round_up(x: int, m: int) -> int:
@@ -123,13 +103,15 @@ class TileMap:
         return 1.0 - self.vl / max(1, self.padded_elems)
 
 
-def tile_for(lv: LVec, target: TPUTarget = TARGET, *, mxu: bool = False) -> TileMap:
+def tile_for(lv: LVec, target: Optional[Union[str, Target]] = None, *,
+             mxu: bool = False) -> TileMap:
     """Compute the physical tile for a logical vector (the Table-2 lookup).
 
     1-D logical vectors are laid out along lanes of a single vreg row;
     >=2-D tiles pad the minor dim to the lane width and the second-minor
     dim to the dtype sublane count (or 128 for MXU operands).
     """
+    target = _resolve(target)
     shape = lv.shape
     if len(shape) == 0:
         return TileMap(lv, (1, target.lane))
@@ -165,7 +147,7 @@ _NEON_TYPES = {
 }
 
 
-def neon_type_table(target: TPUTarget = TARGET):
+def neon_type_table(target: Optional[Union[str, Target]] = None):
     """NEON type -> (LVec, TileMap) for the TPU target — Table 2 analogue.
 
     Every NEON type is mappable on TPU (lane width 128 elems >= any NEON
@@ -173,6 +155,7 @@ def neon_type_table(target: TPUTarget = TARGET):
     ``waste`` column shows why whole-tile batching (the framework layer)
     rather than per-register emulation is the right adaptation.
     """
+    target = _resolve(target)
     table = {}
     for name, (shape, dtype) in _NEON_TYPES.items():
         lv = LVec(shape, dtype)
@@ -180,12 +163,18 @@ def neon_type_table(target: TPUTarget = TARGET):
     return table
 
 
-def vmem_fit(block_elems_by_dtype, target: TPUTarget = TARGET,
+def vmem_fit(block_elems_by_dtype,
+             target: Optional[Union[str, Target]] = None,
              headroom: float = 0.9) -> bool:
-    """True if the summed block working set fits the VMEM budget."""
+    """True if the summed block working set fits the target's scratch
+    budget (targets with no VMEM-style constraint always fit)."""
+    target = _resolve(target)
+    if target.vmem_bytes is None:
+        return True
     total = sum(int(n) * jnp.dtype(dt).itemsize for n, dt in block_elems_by_dtype)
     return total <= target.vmem_bytes * headroom
 
 
-def mxu_aligned(*dims: int, target: TPUTarget = TARGET) -> bool:
+def mxu_aligned(*dims: int, target: Optional[Union[str, Target]] = None) -> bool:
+    target = _resolve(target)
     return all(d % target.mxu == 0 for d in dims)

@@ -1,0 +1,10 @@
+"""Compatibility shim for the pallas-TPU compiler-params rename.
+
+Newer jax exposes ``pltpu.CompilerParams``; 0.4.x calls the same class
+``TPUCompilerParams``.  Alias the new name onto the module so kernel
+call sites can use one spelling everywhere.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+    pltpu.CompilerParams = pltpu.TPUCompilerParams

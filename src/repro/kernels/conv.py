@@ -25,7 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vtypes import TARGET, round_up, vmem_fit
+from . import _pltpu_compat  # noqa: F401  (CompilerParams rename shim)
+
+from repro.core.vtypes import round_up, vmem_fit
 from repro.core import masks
 
 

@@ -26,7 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vtypes import TARGET, round_up
+from . import _pltpu_compat  # noqa: F401  (CompilerParams rename shim)
+
+from repro.core.targets import compile_target
+from repro.core.vtypes import round_up
 from repro.core import masks
 
 _LN2 = 0.6931471805599453
@@ -108,10 +111,11 @@ def _vrelu_body(x_ref, o_ref, *, clamp_min, clamp_max, out_dtype):
 def _elementwise_call(body, x, *, interpret=False, **body_kw):
     """Pack any logical shape into (rows, 128) tiles, run, slice the tail."""
     shape, dtype = x.shape, x.dtype
+    tgt = compile_target()
     n = x.size
-    lane = TARGET.lane
+    lane = tgt.lane
     rows = max(1, round_up(n, lane) // lane)
-    rows_p = round_up(rows, TARGET.sublane(dtype))
+    rows_p = round_up(rows, tgt.sublane(dtype))
     flat = masks.pad_to(x.reshape(-1), (rows_p * lane,)).reshape(rows_p, lane)
     br = min(BLOCK_ROWS, rows_p)
     rows_p2 = round_up(rows_p, br)

@@ -23,7 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vtypes import TARGET, round_up
+from . import _pltpu_compat  # noqa: F401  (CompilerParams rename shim)
+
+from repro.core.targets import compile_target, current_target
+from repro.core.vtypes import round_up
 from repro.core import masks
 
 NEG = -1e30
@@ -97,10 +100,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
     _, hkv, sk, _ = k.shape
     group = h // hkv
     scale = scale if scale is not None else float(d) ** -0.5
-    bq_ = min(bq, round_up(sq, TARGET.sublane(q.dtype)))
-    bk_ = min(bk, round_up(sk, TARGET.lane))
+    tgt = compile_target()
+    bq_ = min(bq, round_up(sq, tgt.sublane(q.dtype)))
+    bk_ = min(bk, round_up(sk, tgt.lane))
     sqp, skp = round_up(sq, bq_), round_up(sk, bk_)
-    dp = round_up(d, TARGET.lane)
+    dp = round_up(d, tgt.lane)
     q_p = masks.pad_to(q, (b, h, sqp, dp))
     k_p = masks.pad_to(k, (b, hkv, skp, dp))
     v_p = masks.pad_to(v, (b, hkv, skp, dp))
@@ -124,8 +128,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
         out_shape=jax.ShapeDtypeStruct((b, h, sqp, dp), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq_, dp), jnp.float32),
-            pltpu.VMEM((bq_, TARGET.lane), jnp.float32),
-            pltpu.VMEM((bq_, TARGET.lane), jnp.float32),
+            pltpu.VMEM((bq_, tgt.lane), jnp.float32),
+            pltpu.VMEM((bq_, tgt.lane), jnp.float32),
         ],
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
@@ -196,10 +200,11 @@ def decode_attention(q, k, v, lengths, *, softcap=None, window=None,
     _, hkv, s, _ = k.shape
     group = h // hkv
     scale = scale if scale is not None else float(d) ** -0.5
-    bk_ = min(bk, round_up(s, TARGET.lane))
+    tgt = compile_target()
+    bk_ = min(bk, round_up(s, tgt.lane))
     sp = round_up(s, bk_)
-    dp = round_up(d, TARGET.lane)
-    rq = TARGET.sublane(q.dtype)  # pad the single query row to a sublane tile
+    dp = round_up(d, tgt.lane)
+    rq = tgt.sublane(q.dtype)  # pad the single query row to a sublane tile
     q_p = masks.pad_to(q, (b, h, rq, dp))
     k_p = masks.pad_to(k, (b, hkv, sp, dp))
     v_p = masks.pad_to(v, (b, hkv, sp, dp))
@@ -221,8 +226,8 @@ def decode_attention(q, k, v, lengths, *, softcap=None, window=None,
                                    lambda bb, hh, kk, lr: (bb, hh, 0, 0)),
             scratch_shapes=[
                 pltpu.VMEM((rq, dp), jnp.float32),
-                pltpu.VMEM((rq, TARGET.lane), jnp.float32),
-                pltpu.VMEM((rq, TARGET.lane), jnp.float32),
+                pltpu.VMEM((rq, tgt.lane), jnp.float32),
+                pltpu.VMEM((rq, tgt.lane), jnp.float32),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, h, rq, dp), q.dtype),
@@ -239,9 +244,14 @@ def cost(q, k, v, *, causal=True, **kw) -> int:
     import math
     b, h, sq, d = q.shape
     sk = k.shape[2]
-    mx = TARGET.mxu
+    tgt = current_target()
     frac = 0.5 if causal and sq == sk else 1.0
-    qk = b * h * math.ceil(sq / mx) * math.ceil(sk / mx) * math.ceil(d / mx)
-    pv = b * h * math.ceil(sq / mx) * math.ceil(d / mx) * math.ceil(sk / mx)
-    soft = 6 * b * h * math.ceil(sq * sk / TARGET.vreg_elems(q.dtype))
+    if tgt.has_mxu:
+        mx = tgt.mxu
+        qk = b * h * math.ceil(sq / mx) * math.ceil(sk / mx) * math.ceil(d / mx)
+        pv = b * h * math.ceil(sq / mx) * math.ceil(d / mx) * math.ceil(sk / mx)
+    else:                        # vfma ladder at VLA width
+        vreg = tgt.vreg_elems(q.dtype)
+        qk = pv = b * h * math.ceil(sq * sk * d / vreg)
+    soft = 6 * b * h * math.ceil(sq * sk / tgt.vreg_elems(q.dtype))
     return int(frac * (qk + pv + soft))

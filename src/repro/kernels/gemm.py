@@ -18,7 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vtypes import TARGET, round_up
+from . import _pltpu_compat  # noqa: F401  (CompilerParams rename shim)
+
+from repro.core.targets import compile_target
+from repro.core.vtypes import round_up
 from repro.core import masks
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 256, 256, 512
@@ -57,7 +60,8 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
     assert k == k2, (a.shape, b.shape)
     # Tail predication (paper Listing 4): pad to hardware tiles, slice the
     # logical extent back out.  Zero K-padding is exact for accumulation.
-    bm_, bn_, bk_ = min(bm, round_up(m, TARGET.mxu)), min(bn, round_up(n, TARGET.lane)), min(bk, round_up(k, TARGET.lane))
+    tgt = compile_target()
+    bm_, bn_, bk_ = min(bm, round_up(m, tgt.mxu)), min(bn, round_up(n, tgt.lane)), min(bk, round_up(k, tgt.lane))
     mp, np_, kp = round_up(m, bm_), round_up(n, bn_), round_up(k, bk_)
     a_p = masks.pad_to(a, (mp, kp))
     b_p = masks.pad_to(b, (kp, np_))

@@ -40,12 +40,28 @@ def default_policy() -> str:
 
 
 # ---------------------------------------------------------------------------
+# Cost models.  The generic tier counts the scalar loop's element ops
+# (explicit shape formulas); the vector tier *analyzes its own generated
+# code* against the active target (trace.traced_cost — the paper's §4
+# methodology), including the original-SIMDe union round-trip and
+# target-dependent scalarization of transcendentals; the pallas tier
+# declares its kernel-structure count.  registry.select compares these
+# per (op, shape, target) and picks the cheapest.
+# ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
 # gemm
 # ---------------------------------------------------------------------------
 
-register("gemm", "generic", cost=trace.scalar_cost(2),
+def _gemm_scalar_cost(a, b, *_, **__):
+    m, k = a.shape
+    return 2 * m * k * b.shape[1]
+
+
+register("gemm", "generic", cost=_gemm_scalar_cost,
          doc="scalar MAC loop emulation")(ref.gemm)
-register("gemm", "vector", cost=trace.vector_cost(),
+register("gemm", "vector", cost=trace.traced_cost(ref.gemm),
          doc="jnp.dot (vector-attribute tier)")(ref.gemm)
 
 
@@ -65,8 +81,17 @@ def gemm(a, b, bias=None, clamp_min=float("-inf"), clamp_max=float("inf"),
 # convolutions
 # ---------------------------------------------------------------------------
 
-register("conv_hwc", "generic", cost=trace.scalar_cost())(ref.conv_hwc)
-register("conv_hwc", "vector", cost=trace.vector_cost())(ref.conv_hwc)
+def _conv_scalar_cost(x, w, bias=None, stride=(1, 1), **_):
+    n, h, iw, ci = x.shape
+    kh, kw_, _, co = w.shape
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (iw - kw_) // sw + 1
+    return 2 * n * oh * ow * co * kh * kw_ * ci
+
+
+register("conv_hwc", "generic", cost=_conv_scalar_cost)(ref.conv_hwc)
+register("conv_hwc", "vector",
+         cost=trace.traced_cost(ref.conv_hwc))(ref.conv_hwc)
 
 
 @register("conv_hwc", "pallas", cost=_conv.cost_conv,
@@ -79,8 +104,16 @@ def conv_hwc(x, w, bias=None, stride=(1, 1), *, policy=None):
     return dispatch("conv_hwc", x, w, bias, stride, policy=policy)
 
 
-register("dwconv", "generic", cost=trace.scalar_cost())(ref.dwconv)
-register("dwconv", "vector", cost=trace.vector_cost())(ref.dwconv)
+def _dwconv_scalar_cost(x, w, bias=None, stride=(1, 1), **_):
+    n, h, iw, c = x.shape
+    kh, kw_, _ = w.shape
+    sh, sw = stride
+    oh, ow = (h - kh) // sh + 1, (iw - kw_) // sw + 1
+    return 2 * n * oh * ow * c * kh * kw_
+
+
+register("dwconv", "generic", cost=_dwconv_scalar_cost)(ref.dwconv)
+register("dwconv", "vector", cost=trace.traced_cost(ref.dwconv))(ref.dwconv)
 
 
 @register("dwconv", "pallas", cost=_conv.cost_dwconv,
@@ -97,8 +130,15 @@ def dwconv(x, w, bias=None, stride=(1, 1), *, policy=None):
 # pooling
 # ---------------------------------------------------------------------------
 
-register("maxpool", "generic", cost=trace.scalar_cost())(ref.maxpool)
-register("maxpool", "vector", cost=trace.vector_cost())(ref.maxpool)
+def _pool_scalar_cost(mult):
+    def cost(x, window=(2, 2), stride=None, **_):
+        return mult * x.size  # one compare/update per input element
+    return cost
+
+
+register("maxpool", "generic", cost=_pool_scalar_cost(1))(ref.maxpool)
+register("maxpool", "vector",
+         cost=trace.traced_cost(ref.maxpool))(ref.maxpool)
 
 
 @register("maxpool", "pallas", cost=_pool.cost_maxpool,
@@ -111,8 +151,9 @@ def maxpool(x, window=(2, 2), stride=None, *, policy=None):
     return dispatch("maxpool", x, window, stride, policy=policy)
 
 
-register("argmaxpool", "generic", cost=trace.scalar_cost())(ref.argmaxpool)
-register("argmaxpool", "vector", cost=trace.vector_cost(3))(ref.argmaxpool)
+register("argmaxpool", "generic", cost=_pool_scalar_cost(2))(ref.argmaxpool)
+register("argmaxpool", "vector",
+         cost=trace.traced_cost(ref.argmaxpool))(ref.argmaxpool)
 
 
 @register("argmaxpool", "pallas", cost=_pool.cost_argmaxpool,
@@ -129,8 +170,8 @@ def argmaxpool(x, window=(2, 2), stride=None, *, policy=None):
 # elementwise
 # ---------------------------------------------------------------------------
 
-register("vrelu", "generic", cost=trace.scalar_cost())(ref.vrelu)
-register("vrelu", "vector", cost=trace.vector_cost(2))(ref.vrelu)
+register("vrelu", "generic", cost=trace.scalar_cost(2))(ref.vrelu)
+register("vrelu", "vector", cost=trace.traced_cost(ref.vrelu))(ref.vrelu)
 
 
 @register("vrelu", "pallas", cost=_ew.cost_vrelu, supports=_ew.supports,
@@ -143,10 +184,14 @@ def vrelu(x, clamp_min=0.0, clamp_max=float("inf"), *, policy=None):
     return dispatch("vrelu", x, clamp_min, clamp_max, policy=policy)
 
 
-# For the transcendentals the *vector* tier's true cost is scalar: the
-# baseline toolchain has no vector libm (the paper's Figure-2 story).
-register("vsqrt", "generic", cost=trace.scalar_cost())(ref.vsqrt)
-register("vsqrt", "vector", cost=trace.scalar_cost(1))(ref.vsqrt)
+# For the transcendentals the vector tier's true cost is target-dependent:
+# with no vector libm (the baseline RVV toolchain) the call scalarizes —
+# the paper's Figure-2 story.  traced_cost(transcendental=True) models
+# exactly that via targets.Target.has_vector_libm.
+register("vsqrt", "generic",
+         cost=trace.scalar_cost(trace.PRIM_SCALAR_COST["sqrt"]))(ref.vsqrt)
+register("vsqrt", "vector",
+         cost=trace.traced_cost(ref.vsqrt, transcendental=True))(ref.vsqrt)
 
 
 @register("vsqrt", "pallas", cost=_ew.cost_vsqrt, supports=_ew.supports,
@@ -159,8 +204,10 @@ def vsqrt(x, *, policy=None):
     return dispatch("vsqrt", x, policy=policy)
 
 
-register("vtanh", "generic", cost=trace.scalar_cost())(ref.vtanh)
-register("vtanh", "vector", cost=trace.scalar_cost(1))(ref.vtanh)
+register("vtanh", "generic",
+         cost=trace.scalar_cost(trace.PRIM_SCALAR_COST["tanh"]))(ref.vtanh)
+register("vtanh", "vector",
+         cost=trace.traced_cost(ref.vtanh, transcendental=True))(ref.vtanh)
 
 
 @register("vtanh", "pallas", cost=_ew.cost_vtanh, supports=_ew.supports,
@@ -173,8 +220,12 @@ def vtanh(x, *, policy=None):
     return dispatch("vtanh", x, policy=policy)
 
 
-register("vsigmoid", "generic", cost=trace.scalar_cost())(ref.vsigmoid)
-register("vsigmoid", "vector", cost=trace.scalar_cost(1))(ref.vsigmoid)
+register("vsigmoid", "generic",
+         cost=trace.scalar_cost(
+             trace.PRIM_SCALAR_COST["logistic"]))(ref.vsigmoid)
+register("vsigmoid", "vector",
+         cost=trace.traced_cost(ref.vsigmoid,
+                                transcendental=True))(ref.vsigmoid)
 
 
 @register("vsigmoid", "pallas", cost=_ew.cost_vsigmoid, supports=_ew.supports,
@@ -191,8 +242,14 @@ def vsigmoid(x, *, policy=None):
 # ibilinear
 # ---------------------------------------------------------------------------
 
-register("ibilinear", "generic", cost=trace.scalar_cost())(ref.ibilinear)
-register("ibilinear", "vector", cost=trace.vector_cost(8))(ref.ibilinear)
+def _ibilinear_scalar_cost(img, iy, ix, wy, wx, **_):
+    # per output element: 4 gathered loads + 8 mul/add
+    return 12 * iy.shape[0] * img.shape[-1]
+
+
+register("ibilinear", "generic", cost=_ibilinear_scalar_cost)(ref.ibilinear)
+register("ibilinear", "vector",
+         cost=trace.traced_cost(ref.ibilinear))(ref.ibilinear)
 
 
 @register("ibilinear", "pallas", cost=_ib.cost, supports=_ib.supports,
@@ -209,14 +266,16 @@ def ibilinear(img, iy, ix, wy, wx, *, policy=None):
 # attention (beyond-paper; model-facing layout (B, S, H, D))
 # ---------------------------------------------------------------------------
 
-@register("attention", "vector", cost=trace.vector_cost(8),
-          doc="attention; chunked online-softmax beyond 2k seq")
 def _attn_vector(q, k, v, causal=True, window=None, softcap=None, scale=None):
     if q.shape[1] * k.shape[1] > 2048 * 2048:
         return ref.attention_chunked(q, k, v, causal=causal, window=window,
                                      softcap=softcap, scale=scale)
     return ref.attention(q, k, v, causal=causal, window=window,
                          softcap=softcap, scale=scale)
+
+
+register("attention", "vector", cost=trace.traced_cost(_attn_vector),
+         doc="attention; chunked online-softmax beyond 2k seq")(_attn_vector)
 
 
 def _attn_supports(q, k, v, causal=True, window=None, softcap=None,
@@ -247,10 +306,13 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
                     policy=policy)
 
 
-@register("decode_attention", "vector", cost=trace.vector_cost(8))
 def _dec_attn_vector(q, k, v, lengths, window=None, softcap=None, scale=None):
     # q:(B,1,H,D); mask cache positions >= per-row valid length
     return _dec_ref(q, k, v, lengths, window, softcap, scale)
+
+
+register("decode_attention", "vector",
+         cost=trace.traced_cost(_dec_attn_vector))(_dec_attn_vector)
 
 
 def _dec_ref(q, k, v, lengths, window, softcap, scale):
@@ -298,12 +360,14 @@ def decode_attention(q, k, v, lengths, *, window=None, softcap=None,
 # ssd (Mamba2)
 # ---------------------------------------------------------------------------
 
-@register("ssd", "vector", cost=trace.vector_cost(12),
-          doc="chunked jnp SSD (sequential scan below 256 steps)")
 def _ssd_vector(x, dt, A, B, C, D=None, *, chunk=128):
     if x.shape[1] > 256:
         return ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
     return ref.ssd(x, dt, A, B, C, D)
+
+
+register("ssd", "vector", cost=trace.traced_cost(_ssd_vector),
+         doc="chunked jnp SSD (sequential scan below 256 steps)")(_ssd_vector)
 
 
 @register("ssd", "pallas", cost=_ssd.cost, supports=_ssd.supports,

@@ -24,7 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vtypes import TARGET, round_up
+from . import _pltpu_compat  # noqa: F401  (CompilerParams rename shim)
+
+from repro.core.targets import compile_target, current_target
+from repro.core.vtypes import round_up
 from repro.core import masks
 
 
@@ -67,7 +70,7 @@ def ssd(x, dt, A, B, C, D=None, *, chunk=128, interpret=False):
     b, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
     rep = h // g
-    L = min(chunk, round_up(s, TARGET.sublane(jnp.float32)))
+    L = min(chunk, round_up(s, compile_target().sublane(jnp.float32)))
     sp = round_up(s, L)
     nchunks = sp // L
     # (b,h) flattened onto the leading grid axis; groups expanded to heads
@@ -117,10 +120,15 @@ def cost(x, dt, A, B, C, D=None, *, chunk=128, **_) -> int:
     b, s, h, p = x.shape
     n = B.shape[-1]
     L = chunk
-    mx = TARGET.mxu
+    tgt = current_target()
     nch = math.ceil(s / L)
-    per_chunk = (math.ceil(L / mx) ** 2 * math.ceil(n / mx)      # C B^T
-                 + math.ceil(L / mx) ** 2 * math.ceil(p / mx)    # (GW) x
-                 + 2 * math.ceil(L / mx) * math.ceil(n / mx) * math.ceil(p / mx)
-                 + 8 * math.ceil(L * L / TARGET.vreg_elems(x.dtype)))
+    vreg = tgt.vreg_elems(x.dtype)
+    if tgt.has_mxu:
+        mx = tgt.mxu
+        mm = (math.ceil(L / mx) ** 2 * math.ceil(n / mx)         # C B^T
+              + math.ceil(L / mx) ** 2 * math.ceil(p / mx)       # (GW) x
+              + 2 * math.ceil(L / mx) * math.ceil(n / mx) * math.ceil(p / mx))
+    else:                        # vfma ladder at VLA width
+        mm = math.ceil(L * L * (n + p) / vreg) + 2 * math.ceil(L * n * p / vreg)
+    per_chunk = mm + 8 * math.ceil(L * L / vreg)
     return b * h * nch * per_chunk

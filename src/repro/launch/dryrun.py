@@ -165,6 +165,8 @@ def lower_cell(arch: str, shape_name: str, mesh):
 def analyze(lowered, compiled):
     from repro.launch import hlo_analysis
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<0.5 returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     txt = compiled.as_text()
     hlo = hlo_analysis.analyze(txt)

@@ -2,10 +2,13 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import masks, vtypes
-from repro.core.vtypes import LVec, TARGET, neon_type_table, tile_for
+from hypothesis_compat import given, settings, st
+
+from repro.core import masks, targets, vtypes
+from repro.core.vtypes import LVec, neon_type_table, tile_for
+
+V5E = targets.get_target("tpu-v5e")
 
 
 def test_neon_table_complete():
@@ -43,9 +46,9 @@ def test_tile_alignment():
 
 
 def test_vreg_elems():
-    assert TARGET.vreg_elems(jnp.float32) == 1024
-    assert TARGET.vreg_elems(jnp.bfloat16) == 2048
-    assert TARGET.vreg_elems(jnp.int8) == 4096
+    assert V5E.vreg_elems(jnp.float32) == 1024
+    assert V5E.vreg_elems(jnp.bfloat16) == 2048
+    assert V5E.vreg_elems(jnp.int8) == 4096
 
 
 @given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 30))

@@ -80,9 +80,12 @@ jfn = jax.jit(fn, in_shardings=(Sh.ns(mesh, pspecs), Sh.ns(mesh, ospecs),
 with mesh:
     lowered = jfn.lower(params_sds, opt_sds, batch)
 compiled = lowered.compile()
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):   # jax<0.5 returns [dict]
+    ca = ca[0] if ca else {}
 print(json.dumps({"ok": True,
                   "devices": len(jax.devices()),
-                  "flops": compiled.cost_analysis().get("flops", 0)}))
+                  "flops": ca.get("flops", 0)}))
 """
     out = json.loads(_run(code).strip().splitlines()[-1])
     assert out["ok"] and out["devices"] == 8
