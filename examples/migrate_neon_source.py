@@ -1,0 +1,37 @@
+"""Migration walkthrough: compile real NEON intrinsic source with the
+port frontend, run it, and read the per-intrinsic analysis — the
+paper's end-to-end task in four calls.
+
+  PYTHONPATH=src python examples/migrate_neon_source.py
+"""
+import os
+
+import numpy as np
+
+from repro import port
+
+CORPUS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "neon_corpus")
+
+# 1. compile legacy source: C NEON -> typed SSA -> logical ISA
+kernel = port.compile_file(os.path.join(CORPUS, "vtanh.c"))
+print(f"compiled {kernel!r}\n")
+
+# 2. execute: every intrinsic dispatches through the cost-driven
+#    selector; outputs are the written buffers
+n = 64
+x = np.linspace(-5, 5, n, dtype=np.float32)
+y = np.asarray(kernel(n, x, np.zeros(n, np.float32)))
+err = np.max(np.abs(y - np.tanh(x)))
+print(f"ported vtanh on {n} lanes: max |err| vs np.tanh = {err:.2e}\n")
+
+# 3. Table 2 for this kernel: which register types map at vlen=64?
+sub = kernel.substitution("rvv-64")
+unmapped = [name for name, ok in sub.items() if not ok]
+print(f"rvv-64 substitution: {len(unmapped)}/{len(sub)} intrinsics fall "
+      f"back to the scalar loop\n")
+
+# 4. the migration report: per-intrinsic tier + dynamic instruction
+#    estimates across the RVV width family
+rep = port.report(kernel, n, x, np.zeros(n, np.float32))
+print(port.format_report(rep))

@@ -1,0 +1,249 @@
+"""Differential harness for the NEON corpus.
+
+Each corpus kernel gets (a) an argument builder fixing buffer shapes and
+(b) a NumPy reference implementing the *same algorithm* in float32 (not
+a looser mathematical ideal), so ported execution must match tightly —
+the SIMDe unit-test methodology.  ``run_differential()`` compiles every
+``.c`` file, executes it through ``registry.dispatch`` under the given
+target/policy, and asserts against the reference.
+
+Run directly:  PYTHONPATH=src python examples/neon_corpus/harness.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+CORPUS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+F = np.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    file: str
+    kernel: str
+    make_args: Callable[[np.random.Generator], tuple]
+    reference: Callable[..., tuple]
+    rtol: float = 1e-6
+    atol: float = 1e-6
+
+
+def _rand(rng, n, lo=-2.0, hi=2.0):
+    return rng.uniform(lo, hi, n).astype(F)
+
+
+# -- reference algorithms (float32 mirrors of the kernels) -------------------
+
+def _tanh_rational(t: np.ndarray) -> np.ndarray:
+    t = np.clip(t, F(-4.0), F(4.0))
+    t2 = t * t
+    p = t2 + F(378.0)
+    p = p * t2 + F(17325.0)
+    p = p * t2 + F(135135.0)
+    p = p * t
+    q = t2 * F(28.0) + F(3150.0)
+    q = q * t2 + F(62370.0)
+    q = q * t2 + F(135135.0)
+    r = (F(1.0) / q).astype(F)
+    r = r * (F(2.0) - q * r)
+    r = r * (F(2.0) - q * r)
+    return (p * r).astype(F)
+
+
+def _ref_vadd(n, a, b, y):
+    out = y.copy()
+    out[:n] = a[:n] + b[:n]
+    return out
+
+
+def _ref_vmul(n, a, b, y):
+    out = y.copy()
+    out[:n] = a[:n] * b[:n]
+    return out
+
+
+def _ref_vmulcaddc(n, x, scale, bias, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    k = m // 4
+    out[:m] = x[:m] * np.tile(scale, k) + np.tile(bias, k)
+    return out
+
+
+def _ref_vclamp(n, x, y, lo, hi):
+    out = y.copy()
+    out[:n] = np.clip(x[:n], F(lo), F(hi))
+    return out
+
+
+def _ref_vtanh(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    out[:m] = _tanh_rational(x[:m])
+    return out
+
+
+def _ref_vsigmoid(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    th = _tanh_rational((x[:m] * F(0.5)).astype(F))
+    out[:m] = F(0.5) + th * F(0.5)
+    return out
+
+
+def _ref_vdot(n, a, b, sum_buf):
+    m = (n // 4) * 4
+    acc = np.zeros(4, F)
+    for i in range(0, m, 4):
+        acc = acc + a[i:i + 4] * b[i:i + 4]
+    s = F(acc.sum())
+    for i in range(m, n):
+        s = F(s + a[i] * b[i])
+    out = sum_buf.copy()
+    out[0] = s
+    return out
+
+
+def _ref_vrsqrt(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    v = x[:m]
+    r = (F(1.0) / np.sqrt(v)).astype(F)
+    r = r * ((F(3.0) - (v * r) * r) * F(0.5))
+    r = r * ((F(3.0) - (v * r) * r) * F(0.5))
+    out[:m] = r
+    return out
+
+
+def _ref_vfold(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    q = x[:m].reshape(-1, 4)
+    out[:m // 2] = (q[:, 2:] + q[:, :2]).reshape(-1)
+    return out
+
+
+def _ref_vselect(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    out[:m] = np.where(x[:m] > 0, x[:m], F(0.0))
+    return out
+
+
+def _ref_vrbit(n, x, y):
+    out = y.copy()
+    m = (n // 16) * 16
+    v = x[:m]
+    v = ((v >> 1) & 0x55) | ((v & 0x55) << 1)
+    v = ((v >> 2) & 0x33) | ((v & 0x33) << 2)
+    v = ((v >> 4) & 0x0F) | ((v & 0x0F) << 4)
+    out[:m] = v
+    return out
+
+
+def _ref_reduce_max(n, x, out_buf):
+    out = out_buf.copy()
+    out[0] = np.max(x[:n])
+    return out
+
+
+def _ref_vcvt(n, x, y):
+    out = y.copy()
+    m = (n // 4) * 4
+    out[:m] = x[:m].astype(np.int32)    # C truncation semantics
+    return out
+
+
+# -- the corpus ---------------------------------------------------------------
+
+def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
+    """``n`` drives strip-only kernels (multiple of 16); ``tail_n`` the
+    kernels with scalar tails (deliberately not a multiple of 4)."""
+    assert n % 16 == 0, "n must be a multiple of 16 (vrbit strips)"
+
+    def args_abn(rng):     # (n, a, b, y) with tail
+        return (tail_n, _rand(rng, tail_n), _rand(rng, tail_n),
+                np.zeros(tail_n, F))
+
+    return [
+        Case("vadd.c", "xnn_f32_vadd_ukernel", args_abn, _ref_vadd),
+        Case("vmul.c", "xnn_f32_vmul_ukernel", args_abn, _ref_vmul),
+        Case("vmulcaddc.c", "xnn_f32_vmulcaddc_ukernel_c4",
+             lambda rng: (n, _rand(rng, n), _rand(rng, 4, 0.5, 1.5),
+                          _rand(rng, 4), np.zeros(n, F)),
+             _ref_vmulcaddc),
+        Case("vclamp.c", "xnn_f32_vclamp_ukernel",
+             lambda rng: (tail_n, _rand(rng, tail_n, -3, 3),
+                          np.zeros(tail_n, F), -1.0, 1.5),
+             _ref_vclamp),
+        Case("vtanh.c", "xnn_f32_vtanh_ukernel",
+             lambda rng: (n, _rand(rng, n, -6, 6), np.zeros(n, F)),
+             _ref_vtanh, rtol=2e-5, atol=1e-6),
+        Case("vsigmoid.c", "xnn_f32_vsigmoid_ukernel",
+             lambda rng: (n, _rand(rng, n, -8, 8), np.zeros(n, F)),
+             _ref_vsigmoid, rtol=2e-5, atol=1e-6),
+        Case("vdot.c", "xnn_f32_vdot_ukernel",
+             lambda rng: (tail_n, _rand(rng, tail_n), _rand(rng, tail_n),
+                          np.zeros(1, F)),
+             _ref_vdot, rtol=1e-5),
+        Case("vrsqrt.c", "xnn_f32_vrsqrt_ukernel",
+             lambda rng: (n, _rand(rng, n, 0.01, 9.0), np.zeros(n, F)),
+             _ref_vrsqrt, rtol=1e-5),
+        Case("vfold.c", "fold_halves_f32",
+             lambda rng: (n, _rand(rng, n), np.zeros(n // 2, F)),
+             _ref_vfold),
+        Case("vselect.c", "relu_bsl_f32",
+             lambda rng: (n, _rand(rng, n), np.zeros(n, F)),
+             _ref_vselect),
+        Case("vrbit.c", "bitreverse_u8",
+             lambda rng: (n, rng.integers(0, 256, n).astype(np.uint8),
+                          np.zeros(n, np.uint8)),
+             _ref_vrbit),
+        Case("vreduce_max.c", "reduce_max_f32",
+             lambda rng: (tail_n, _rand(rng, tail_n), np.zeros(1, F)),
+             _ref_reduce_max),
+        Case("vcvt.c", "cvt_f32_s32",
+             lambda rng: (n, _rand(rng, n, -100, 100),
+                          np.zeros(n, np.int32)),
+             _ref_vcvt),
+    ]
+
+
+def run_differential(n: int = 64, seed: int = 0, target=None,
+                     policy: Optional[str] = "pallas",
+                     verbose: bool = False) -> Tuple[int, int]:
+    """Compile + execute + check every corpus kernel.  Returns
+    (checked, total-dynamic-instrs-counted)."""
+    from repro import port
+    from repro.core import trace
+
+    checked, instrs = 0, 0
+    for case in cases(n=n, seed=seed):
+        k = port.compile_file(os.path.join(CORPUS_DIR, case.file),
+                              name=case.kernel)
+        rng = np.random.default_rng(seed + checked)
+        args = case.make_args(rng)
+        with trace.count() as c:
+            got = k(*args, policy=policy, target=target)
+        want = case.reference(*args)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=case.rtol, atol=case.atol,
+                                   err_msg=f"{case.kernel} diverged from "
+                                           f"its NumPy reference")
+        checked += 1
+        instrs += c["total"]
+        if verbose:
+            print(f"  {case.kernel:32s} OK   ({c['total']:>5d} instrs)")
+    return checked, instrs
+
+
+if __name__ == "__main__":
+    for tgt in (None, "rvv-128"):
+        label = tgt or "ambient"
+        print(f"# differential corpus run (target={label})")
+        k, i = run_differential(verbose=True, target=tgt)
+        print(f"# {k} kernels OK, {i} dynamic instructions counted\n")

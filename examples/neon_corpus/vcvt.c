@@ -1,0 +1,10 @@
+/* Lane-wise f32 -> s32 conversion (truncating, NEON vcvtq semantics). */
+#include <arm_neon.h>
+
+void cvt_f32_s32(size_t n, const float* x, int32_t* y) {
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    int32x4_t vy = vcvtq_s32_f32(vx);
+    vst1q_s32(y, vy); y += 4;
+  }
+}

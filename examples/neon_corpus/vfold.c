@@ -1,0 +1,14 @@
+/* Paper Listing-5 pattern: vget_high/vget_low split a Q register into D
+ * halves (the slidedown customized conversion), folded with a D-width
+ * add: y[2j..2j+1] = x[4j..4j+1] + x[4j+2..4j+3]. */
+#include <arm_neon.h>
+
+void fold_halves_f32(size_t n, const float* x, float* y) {
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    float32x2_t vhi = vget_high_f32(vx);
+    float32x2_t vlo = vget_low_f32(vx);
+    float32x2_t vs = vadd_f32(vhi, vlo);
+    vst1_f32(y, vs); y += 2;
+  }
+}

@@ -1,0 +1,15 @@
+/* XNNPACK-style vmulcaddc (multiply-by-channel-scale, add channel bias):
+ * y[i] = x[i] * scale[i%4] + bias[i%4], channels = 4. */
+#include <arm_neon.h>
+
+void xnn_f32_vmulcaddc_ukernel_c4(size_t n, const float* x,
+                                  const float* scale, const float* bias,
+                                  float* y) {
+  const float32x4_t vscale = vld1q_f32(scale);
+  const float32x4_t vbias = vld1q_f32(bias);
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    float32x4_t vacc = vfmaq_f32(vbias, vx, vscale);
+    vst1q_f32(y, vacc); y += 4;
+  }
+}

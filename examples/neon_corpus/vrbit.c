@@ -1,0 +1,11 @@
+/* Paper Listing-7 pattern: per-byte bit reversal — the binary-magic-
+ * numbers customized conversion (vrbit has no single-instruction RVV
+ * equivalent; the generic path scalarizes to an 8-step bit loop). */
+#include <arm_neon.h>
+
+void bitreverse_u8(size_t n, const uint8_t* x, uint8_t* y) {
+  for (; n >= 16; n -= 16) {
+    uint8x16_t vx = vld1q_u8(x); x += 16;
+    vst1q_u8(y, vrbitq_u8(vx)); y += 16;
+  }
+}

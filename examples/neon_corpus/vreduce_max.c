@@ -1,0 +1,17 @@
+/* Horizontal max reduction: vld1q_dup seed, vmax strip loop, vmaxv
+ * fold, scalar tail merged with a ternary. */
+#include <arm_neon.h>
+
+void reduce_max_f32(size_t n, const float* x, float* max_out) {
+  float32x4_t vmax = vld1q_dup_f32(x);
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    vmax = vmaxq_f32(vmax, vx);
+  }
+  float vm = vmaxvq_f32(vmax);
+  for (; n != 0; n -= 1) {
+    float vx = *x; x += 1;
+    vm = vx > vm ? vx : vm;
+  }
+  *max_out = vm;
+}

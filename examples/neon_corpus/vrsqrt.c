@@ -1,0 +1,13 @@
+/* f32 reciprocal square root: vrsqrte seed + two vrsqrts Newton steps —
+ * the NEON estimate/step ladder (XNNPACK f32-vrsqrt microkernel shape). */
+#include <arm_neon.h>
+
+void xnn_f32_vrsqrt_ukernel(size_t n, const float* x, float* y) {
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    float32x4_t vacc = vrsqrteq_f32(vx);
+    vacc = vmulq_f32(vacc, vrsqrtsq_f32(vmulq_f32(vx, vacc), vacc));
+    vacc = vmulq_f32(vacc, vrsqrtsq_f32(vmulq_f32(vx, vacc), vacc));
+    vst1q_f32(y, vacc); y += 4;
+  }
+}

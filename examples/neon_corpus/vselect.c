@@ -1,0 +1,14 @@
+/* Paper Listing-6 pattern: a NEON compare produces an all-ones/zeros
+ * unsigned mask (the mv+mseq+merge customized conversion) consumed by
+ * vbsl — here a ReLU written the mask-select way. */
+#include <arm_neon.h>
+
+void relu_bsl_f32(size_t n, const float* x, float* y) {
+  const float32x4_t vzero = vdupq_n_f32(0.0f);
+  for (; n >= 4; n -= 4) {
+    float32x4_t vx = vld1q_f32(x); x += 4;
+    uint32x4_t vmask = vcgtq_f32(vx, vzero);
+    float32x4_t vy = vbslq_f32(vmask, vx, vzero);
+    vst1q_f32(y, vy); y += 4;
+  }
+}

@@ -11,13 +11,13 @@ from . import isa, masks, registry, targets, trace, vtypes
 from .registry import (REGISTRY, dispatch, explain, register, select,
                        use_policy)
 from .targets import (Target, compile_target, current_target, get_target,
-                      set_default_target, use_target)
+                      set_default_target, use_target, with_lmul)
 from .vtypes import LVec, TileMap, neon_type_table, tile_for
 
 __all__ = [
     "isa", "masks", "registry", "targets", "trace", "vtypes",
     "REGISTRY", "dispatch", "explain", "register", "select", "use_policy",
     "Target", "compile_target", "current_target", "get_target",
-    "set_default_target", "use_target",
+    "set_default_target", "use_target", "with_lmul",
     "LVec", "TileMap", "neon_type_table", "tile_for",
 ]

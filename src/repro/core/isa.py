@@ -30,10 +30,11 @@ from .trace import scalar_cost, vector_cost
 
 __all__ = [
     "vadd", "vsub", "vmul", "vmax", "vmin", "vabs", "vneg", "vand", "vorr",
-    "veor", "vshl_n", "vshr_n", "vceq", "vcgt", "vcge", "vbsl", "vmla",
-    "vfma", "vget_high", "vget_low", "vcombine", "vext", "vrev64", "vrbit",
-    "vdup", "vpadd", "vaddv", "vmaxv", "vrecpe", "vrsqrte", "vcvt", "vzip",
-    "vtbl",
+    "veor", "vshl_n", "vshr_n", "vceq", "vcgt", "vcge", "vclt", "vcle",
+    "vbsl", "vmla", "vmls", "vfma", "vget_high", "vget_low", "vcombine",
+    "vext", "vrev64", "vrbit", "vdup", "vpadd", "vaddv", "vmaxv", "vminv",
+    "vrecpe", "vrecps", "vrsqrte", "vrsqrts", "vcvt", "vzip", "vtbl",
+    "vld1", "vst1",
 ]
 
 
@@ -160,6 +161,8 @@ def _cmp(op_name, jnp_cmp):
 vceq = _cmp("vceq", jnp.equal)
 vcgt = _cmp("vcgt", jnp.greater)
 vcge = _cmp("vcge", jnp.greater_equal)
+vclt = _cmp("vclt", jnp.less)
+vcle = _cmp("vcle", jnp.less_equal)
 
 
 # -- select / fused ops ------------------------------------------------------
@@ -194,9 +197,34 @@ def vmla(acc, a, b):
     return dispatch("vmla", acc, a, b)
 
 
+@register("vmls", "vector", cost=vector_cost(2))
+def _vmls_v(acc, a, b):
+    return acc - a * b
+
+
+@register("vmls", "generic", cost=scalar_cost(2))
+def _vmls_g(acc, a, b):
+    f = jax.vmap(lambda c, x, y: c - x * y)
+    return f(jnp.ravel(acc), jnp.ravel(a), jnp.ravel(b)).reshape(acc.shape)
+
+
+def vmls(acc, a, b):
+    return dispatch("vmls", acc, a, b)
+
+
 @register("vfma", "vector", cost=vector_cost(1))
 def _vfma_v(acc, a, b):
     return jnp.asarray(acc) + jnp.asarray(a) * jnp.asarray(b)
+
+
+@register("vfma", "generic", cost=scalar_cost(1))
+def _vfma_g(acc, a, b):
+    acc, a, b = jnp.asarray(acc), jnp.asarray(a), jnp.asarray(b)
+    shp = jnp.broadcast_shapes(acc.shape, a.shape, b.shape)
+    f = jax.vmap(lambda c, x, y: c + x * y)
+    return f(jnp.ravel(jnp.broadcast_to(acc, shp)),
+             jnp.ravel(jnp.broadcast_to(a, shp)),
+             jnp.ravel(jnp.broadcast_to(b, shp))).reshape(shp)
 
 
 def vfma(acc, a, b):
@@ -262,6 +290,7 @@ def vext(a, b, n):
     return dispatch("vext", a, b, n)
 
 
+@register("vrev64", "generic", cost=scalar_cost(1))
 @register("vrev64", "vector", cost=vector_cost(1))
 def _vrev64(a):
     g = 8 // jnp.dtype(a.dtype).itemsize  # elements per 64-bit group
@@ -306,7 +335,22 @@ def vrbit(a):
 
 # -- broadcast / horizontal reductions ---------------------------------------
 
-@register("vdup", "vector", cost=vector_cost(1))
+def _vdup_scalar_cost(x, shape, *_, **__):
+    return int(np.prod(shape)) if shape else 1
+
+
+def _vdup_width(x, shape, *_, **__):
+    # result register width: the scalar operand hides it from the
+    # default widest-array inference (same saturation as
+    # registry._logical_width_bits)
+    elems = int(np.prod(shape)) if shape else 1
+    bits = np.dtype(getattr(x, "dtype", np.float32)).itemsize * 8
+    return min(128, elems * bits)
+
+
+@register("vdup", "generic", cost=_vdup_scalar_cost,
+          doc="per-lane scalar fill loop")
+@register("vdup", "vector", cost=vector_cost(1), width=_vdup_width)
 def _vdup(x, shape):
     return jnp.full(shape, x)
 
@@ -343,6 +387,7 @@ def vaddv(a):
     return dispatch("vaddv", a)
 
 
+@register("vmaxv", "generic", cost=scalar_cost(1))
 @register("vmaxv", "vector", cost=vector_cost(1), doc="vredmax")
 def _vmaxv(a):
     return jnp.max(a, axis=-1)
@@ -350,6 +395,16 @@ def _vmaxv(a):
 
 def vmaxv(a):
     return dispatch("vmaxv", a)
+
+
+@register("vminv", "generic", cost=scalar_cost(1))
+@register("vminv", "vector", cost=vector_cost(1), doc="vredmin")
+def _vminv(a):
+    return jnp.min(a, axis=-1)
+
+
+def vminv(a):
+    return dispatch("vminv", a)
 
 
 # -- reciprocal estimates (Newton-refined on the customized tier) ------------
@@ -368,6 +423,24 @@ def vrecpe(a):
     return dispatch("vrecpe", a)
 
 
+# vrecps(a, b) = 2 - a*b: the Newton-Raphson refinement step paired with
+# vrecpe (NEON's reciprocal ladder; XNNPACK vsigmoid uses one round).
+
+@register("vrecps", "generic", cost=scalar_cost(2))
+def _vrecps_g(a, b):
+    f = jax.vmap(lambda x, y: 2.0 - x * y)
+    return f(jnp.ravel(a), jnp.ravel(b)).reshape(a.shape)
+
+
+@register("vrecps", "vector", cost=vector_cost(2))
+def _vrecps_v(a, b):
+    return 2.0 - a * b
+
+
+def vrecps(a, b):
+    return dispatch("vrecps", a, b)
+
+
 @register("vrsqrte", "generic", cost=scalar_cost(2))
 def _vrsqrte_g(a):
     return jax.vmap(lambda x: 1.0 / jnp.sqrt(x))(jnp.ravel(a)).reshape(a.shape)
@@ -382,6 +455,24 @@ def vrsqrte(a):
     return dispatch("vrsqrte", a)
 
 
+# vrsqrts(a, b) = (3 - a*b) / 2: the refinement step paired with vrsqrte.
+
+@register("vrsqrts", "generic", cost=scalar_cost(3))
+def _vrsqrts_g(a, b):
+    f = jax.vmap(lambda x, y: (3.0 - x * y) * 0.5)
+    return f(jnp.ravel(a), jnp.ravel(b)).reshape(a.shape)
+
+
+@register("vrsqrts", "vector", cost=vector_cost(3))
+def _vrsqrts_v(a, b):
+    return (3.0 - a * b) * 0.5
+
+
+def vrsqrts(a, b):
+    return dispatch("vrsqrts", a, b)
+
+
+@register("vcvt", "generic", cost=scalar_cost(1))
 @register("vcvt", "vector", cost=vector_cost(1))
 def _vcvt(a, dtype):
     return a.astype(dtype)
@@ -400,6 +491,80 @@ def _vzip(a, b):
 
 def vzip(a, b):
     return dispatch("vzip", a, b)
+
+
+# -- memory ops (the port frontend's load/store surface) ---------------------
+#
+# ``vld1``/``vst1`` mirror NEON's unit-stride load/store intrinsics in
+# functional form: a "pointer" is a (buffer, element offset) pair, and a
+# store returns the updated buffer.  The logical register is exactly
+# ``lanes`` elements, so the Table-2 width rule must see that — not the
+# backing buffer's size (which _logical_width_bits would saturate at
+# Q-register width) — hence the explicit ``width=``/``cost=`` models.
+
+def _vld1_width(buf, offset, lanes, *_, **__):
+    return int(lanes) * jnp.dtype(buf.dtype).itemsize * 8
+
+
+def _vld1_cost(buf, offset, lanes, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(lanes), buf.dtype)
+
+
+def _vld1_scalar_cost(buf, offset, lanes, *_, **__):
+    return int(lanes)
+
+
+@register("vld1", "vector", cost=_vld1_cost, width=_vld1_width,
+          doc="unit-stride whole-register load (vle<eew>.v)")
+def _vld1_v(buf, offset, lanes):
+    return jax.lax.dynamic_slice_in_dim(buf, offset, lanes, axis=0)
+
+
+@register("vld1", "generic", cost=_vld1_scalar_cost,
+          doc="per-lane scalar load loop")
+def _vld1_g(buf, offset, lanes):
+    return jax.vmap(lambda i: jax.lax.dynamic_index_in_dim(
+        buf, i, axis=0, keepdims=False))(offset + jnp.arange(lanes))
+
+
+def vld1(buf, offset, lanes):
+    """Load ``lanes`` contiguous elements of ``buf`` starting at
+    ``offset`` into a logical register."""
+    return dispatch("vld1", buf, offset, lanes)
+
+
+def _vst1_width(buf, offset, val, *_, **__):
+    return int(np.prod(val.shape) or 1) * jnp.dtype(val.dtype).itemsize * 8
+
+
+def _vst1_cost(buf, offset, val, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(np.prod(val.shape) or 1), val.dtype)
+
+
+def _vst1_scalar_cost(buf, offset, val, *_, **__):
+    return int(np.prod(val.shape) or 1)
+
+
+@register("vst1", "vector", cost=_vst1_cost, width=_vst1_width,
+          doc="unit-stride whole-register store (vse<eew>.v)")
+def _vst1_v(buf, offset, val):
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, offset, axis=0)
+
+
+@register("vst1", "generic", cost=_vst1_scalar_cost,
+          doc="per-lane scalar store loop")
+def _vst1_g(buf, offset, val):
+    def body(i, acc):
+        return acc.at[offset + i].set(val[i])
+    return jax.lax.fori_loop(0, val.shape[0], body, buf)
+
+
+def vst1(buf, offset, val):
+    """Store register ``val`` into ``buf`` at element ``offset``;
+    returns the updated buffer (functional-store semantics)."""
+    return dispatch("vst1", buf, offset, val)
 
 
 @register("vtbl", "generic", cost=scalar_cost(2), doc="per-lane table lookup")

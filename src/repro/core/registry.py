@@ -37,6 +37,7 @@ report — the paper's analysis tables as a feature.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import logging
@@ -139,14 +140,27 @@ def _akey(v) -> Any:
 
 
 class _Registry:
-    def __init__(self):
+    # Default LRU capacity: generous for any realistic op x shape x
+    # target working set, but bounded so the serve path cannot grow
+    # without limit under adversarial shape diversity.
+    DEFAULT_CACHE_CAPACITY = 4096
+
+    def __init__(self, cache_capacity: int = DEFAULT_CACHE_CAPACITY):
         self._ops: Dict[str, Dict[str, Lowering]] = {}
         self._tls = threading.local()
         self._default = "pallas"
-        # key -> (lowering, evaluated cost) — see _select_entry
-        self._cache: Dict[Tuple, Tuple[Lowering, Optional[int]]] = {}
+        # LRU: key -> (lowering, evaluated cost) — see _select_entry.
+        # The lock covers every cache read/write: the hit path mutates
+        # recency order (move_to_end), so unlike a plain-dict memo a
+        # concurrent insert+evict could otherwise pop the key out from
+        # under a reader mid-hit.
+        self._cache: "collections.OrderedDict[Tuple, Tuple[Lowering, Optional[int]]]" = \
+            collections.OrderedDict()
+        self._cache_lock = threading.Lock()
+        self._capacity = int(cache_capacity)
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
 
     # -- registration -------------------------------------------------------
     def register(self, op: str, tier: str, *, cost=None, supports=None,
@@ -158,7 +172,8 @@ class _Registry:
             self._ops.setdefault(op, {})[tier] = Lowering(
                 op=op, tier=tier, fn=fn, cost=cost, supports=supports,
                 width=width, doc=doc)
-            self._cache.clear()
+            with self._cache_lock:
+                self._cache.clear()
             return fn
 
         return deco
@@ -261,18 +276,24 @@ class _Registry:
             # key on the Target *value* (frozen dataclass), not its name:
             # an ad-hoc Target sharing a registered name must not collide.
             key = (op, pol, tgt, akeys)
-            hit = self._cache.get(key)
-            if hit is not None:
-                self._hits += 1
-                return hit
+            with self._cache_lock:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    self._hits += 1
+                    self._cache.move_to_end(key)
+                    return hit
         best = self._pick(self._candidates(op, args, kw, pol, tgt))
         if best is None:
             raise KeyError(f"no valid lowering for op {op!r} at policy "
                            f"{pol!r} on target {tgt.name!r} with given args")
         entry = (best.lowering, best.cost)
         if key is not None:
-            self._misses += 1
-            self._cache[key] = entry
+            with self._cache_lock:
+                self._misses += 1
+                self._cache[key] = entry
+                while len(self._cache) > self._capacity:
+                    self._cache.popitem(last=False)
+                    self._evictions += 1
         return entry
 
     def select(self, op: str, *args, policy: Optional[str] = None,
@@ -280,6 +301,19 @@ class _Registry:
                **kw) -> Lowering:
         """Pick the cheapest valid lowering under the active target."""
         return self._select_entry(op, args, kw, policy, target)[0]
+
+    def cost_of(self, op: str, *args, policy: Optional[str] = None,
+                target: Optional[Union[str, "_targets.Target"]] = None,
+                **kw) -> Tuple[str, Optional[int]]:
+        """(tier, evaluated cost) of the selected lowering — the memoized
+        selection-time entry, for analytic consumers (repro.port.report)
+        that need the cost without issuing the op."""
+        low, cost = self._select_entry(op, args, kw, policy, target)
+        return low.tier, cost
+
+    def lowering(self, op: str, tier: str) -> Lowering:
+        """The registered Lowering for (op, tier); KeyError if absent."""
+        return self._ops[op][tier]
 
     def explain(self, op: str, *args, policy: Optional[str] = None,
                 target: Optional[Union[str, "_targets.Target"]] = None,
@@ -316,12 +350,25 @@ class _Registry:
 
     # -- introspection ------------------------------------------------------
     def cache_info(self) -> Dict[str, int]:
-        return {"hits": self._hits, "misses": self._misses,
-                "size": len(self._cache)}
+        with self._cache_lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "size": len(self._cache), "capacity": self._capacity,
+                    "evictions": self._evictions}
+
+    def set_cache_capacity(self, capacity: int) -> None:
+        """Bound the selection cache (LRU eviction past ``capacity``)."""
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        with self._cache_lock:
+            self._capacity = int(capacity)
+            while len(self._cache) > self._capacity:
+                self._cache.popitem(last=False)
+                self._evictions += 1
 
     def cache_clear(self) -> None:
-        self._cache.clear()
-        self._hits = self._misses = 0
+        with self._cache_lock:
+            self._cache.clear()
+            self._hits = self._misses = self._evictions = 0
 
     def ops(self):
         return sorted(self._ops)

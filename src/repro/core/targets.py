@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
 from typing import Dict, Optional, Union
 
@@ -44,6 +45,9 @@ class Target:
                                     # of fp32 for the rvv family)
     mxu: int = 128                  # systolic tile; 1 = no matrix unit
     vlen: int = 0                   # VLA register width in bits (rvv only)
+    lmul: int = 1                   # RVV register-group multiplier (1/2/4/8):
+                                    # a grouped op touches lmul registers
+                                    # and retires lmul register micro-ops
     vmem_bytes: Optional[int] = 16 * 2**20  # None = no scratch constraint
     hbm_bytes: int = 16 * 2**30
     peak_flops_bf16: float = 197e12
@@ -70,31 +74,62 @@ class Target:
         return max(8, 32 // max(1, itemsize)) if itemsize < 4 else 8
 
     def vreg_elems(self, dtype) -> int:
-        """Elements per vector register for ``dtype``.
+        """Elements per vector *register group* for ``dtype``.
 
-        TPU: sublane x lane physical tile.  RVV: ``vlen`` bits re-divided
-        by the element width (LMUL=1), exactly the paper's Table-2 type
-        mapping.
+        TPU: sublane x lane physical tile.  RVV: ``lmul * vlen`` bits
+        re-divided by the element width — the paper's Table-2 type
+        mapping generalized to LMUL>1 register grouping (vint32m2_t
+        holds 2x the m1 elements).
         """
         itemsize = jnp.dtype(dtype).itemsize
         if self.vla:
-            return max(1, self.vlen // (8 * itemsize))
+            return max(1, self.lmul * self.vlen // (8 * itemsize))
         return self.sublane(dtype) * self.lane
+
+    def vinstrs(self, n_elems: int, dtype) -> int:
+        """Dynamic vector micro-ops to process ``n_elems`` of ``dtype``.
+
+        An LMUL=m instruction occupies the datapath for m register
+        passes, so each grouped instruction is charged ``lmul`` retired
+        register micro-ops: grouping widens the *mappable* register
+        (``supports_width``) and shrinks static code, but must not let
+        the selector claim an lmul-x dynamic speedup that the hardware
+        does not deliver.  With lmul=1 this is exactly
+        ``ceil(n / vreg_elems)``.
+        """
+        per = math.ceil(max(1, n_elems) / self.vreg_elems(dtype))
+        return per * (self.lmul if self.vla else 1)
 
     def supports_width(self, bits: int) -> bool:
         """The paper's substitution rule: a fixed-width logical register
-        maps onto this target iff the vector register can hold it
-        (``vlen >= width``).  Fixed-tile machines hold any NEON width."""
+        maps onto this target iff the vector register group can hold it
+        (``lmul * vlen >= width``).  Fixed-tile machines hold any NEON
+        width."""
         if self.vla:
-            return self.vlen >= bits
+            return self.lmul * self.vlen >= bits
         return True
 
 
-def _rvv(bits: int) -> Target:
-    return Target(name=f"rvv-{bits}", kind="rvv", lane=max(1, bits // 32),
-                  mxu=1, vlen=bits, vmem_bytes=None, hbm_bytes=0,
-                  peak_flops_bf16=0.0, hbm_bw=0.0, ici_bw=0.0,
-                  has_vector_libm=False)
+def _rvv(bits: int, lmul: int = 1) -> Target:
+    suffix = "" if lmul == 1 else f"-m{lmul}"
+    return Target(name=f"rvv-{bits}{suffix}", kind="rvv",
+                  lane=max(1, bits // 32), mxu=1, vlen=bits, lmul=lmul,
+                  vmem_bytes=None, hbm_bytes=0, peak_flops_bf16=0.0,
+                  hbm_bw=0.0, ici_bw=0.0, has_vector_libm=False)
+
+
+def with_lmul(t: Union[str, "Target"], lmul: int) -> "Target":
+    """Derive the LMUL=``lmul`` register-grouping variant of an RVV
+    target (``rvv-128`` -> ``rvv-128-m4``)."""
+    t = get_target(t)
+    if not t.vla:
+        raise ValueError(f"lmul grouping only applies to rvv targets, "
+                         f"not {t.name!r}")
+    if lmul not in (1, 2, 4, 8):
+        raise ValueError(f"lmul must be 1/2/4/8, got {lmul}")
+    base = t.name.split("-m")[0]
+    return dataclasses.replace(t, name=base if lmul == 1
+                               else f"{base}-m{lmul}", lmul=lmul)
 
 
 TARGETS: Dict[str, Target] = {}
@@ -113,6 +148,8 @@ register_target(Target(name="tpu-v6", vmem_bytes=32 * 2**20,
                        hbm_bw=1640e9, ici_bw=90e9))
 for _bits in (64, 128, 256, 512, 1024):
     register_target(_rvv(_bits))
+    for _m in (2, 4, 8):
+        register_target(_rvv(_bits, _m))
 
 # The paper's evaluation family (Figure 2 sweeps these widths).
 RVV_FAMILY = ("rvv-128", "rvv-256", "rvv-512", "rvv-1024")

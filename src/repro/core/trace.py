@@ -107,6 +107,14 @@ def vreg_for(dtype) -> int:
     return current_target().vreg_elems(dtype)
 
 
+def vinstrs_for(n_elems: int, dtype) -> int:
+    """Dynamic vector micro-ops to touch ``n_elems`` of ``dtype`` on the
+    active target — ceil(n / vreg_elems), times ``lmul`` on VLA targets
+    (an LMUL-grouped instruction retires lmul register passes; see
+    targets.Target.vinstrs)."""
+    return current_target().vinstrs(n_elems, dtype)
+
+
 # scalar libm call costs (instructions per element) when the baseline
 # toolchain scalarizes — grounded in typical libm implementations
 PRIM_SCALAR_COST = {"tanh": 30, "exp": 25, "logistic": 28, "log": 25,
@@ -154,7 +162,7 @@ def vector_cost(ops_per_vec: int = 1):
         if not arrs:
             return ops_per_vec
         n = max(_elems(a) for a in arrs)
-        return ops_per_vec * math.ceil(n / vreg_for(arrs[0].dtype))
+        return ops_per_vec * vinstrs_for(n, arrs[0].dtype)
 
     return cost
 
@@ -237,7 +245,15 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
             continue
         out = eqn.outvars[0].aval
         n = int(np.prod(out.shape)) if out.shape else 1
-        vreg = vreg_for(getattr(out, "dtype", jnp.float32))
+        dt = getattr(out, "dtype", jnp.float32)
+        if jnp.dtype(dt) == jnp.bool_ and eqn.invars:
+            # mask-producing op (vmseq & co): the compare executes at the
+            # *data* register width; a bool-width vreg would overstate
+            # how many lanes one instruction covers
+            in0 = getattr(eqn.invars[0], "aval", None)
+            dt = getattr(in0, "dtype", dt)
+        # LMUL-aware register-pass count (== ceil(elems/vreg) at lmul=1)
+        vi = lambda m: tgt.vinstrs(m, dt)  # noqa: E731
         if name == "dot_general":
             a = eqn.invars[0].aval
             dims = eqn.params["dimension_numbers"]
@@ -246,7 +262,7 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
                 total += math.ceil(n / (tgt.mxu * tgt.mxu)) * \
                     math.ceil(k / tgt.mxu)
             else:              # vfma ladder (+ union loads on baseline)
-                total += ovh * math.ceil(n * k / vreg)
+                total += ovh * vi(n * k)
         elif name == "conv_general_dilated":
             # HWIO rhs: (kh, kw, ci_per_group, co) — contracted size per
             # output element is kh*kw*ci_per_group regardless of groups
@@ -257,33 +273,31 @@ def _walk(jaxpr, scalarize: bool, union_overhead: bool = False) -> int:
                 total += math.ceil(n / (tgt.mxu * tgt.mxu)) * \
                     math.ceil(k_total / tgt.mxu)
             else:
-                total += ovh * math.ceil(n * k_total / vreg)
+                total += ovh * vi(n * k_total)
         elif "reduce_window" in name:
             wd = eqn.params.get("window_dimensions", ())
             win = int(np.prod(wd)) if wd else 2
-            total += ovh * win * math.ceil(n / vreg)
+            total += ovh * win * vi(n)
         elif name in ("gather", "scatter", "scatter-add", "scatter_add"):
             # no per-lane vector gather; TPU moves (sublane,128) rows
             gran = 8 if tgt.has_mxu else 1
             total += max(1, n // gran)
         elif name in ("sort", "top_k"):
-            total += ovh * math.ceil(n * max(1, int(np.log2(max(2, n))))
-                                     / vreg)
+            total += ovh * vi(n * max(1, int(np.log2(max(2, n)))))
         elif name in SCALARIZED_PRIMS:
             if scalarize:
                 total += PRIM_SCALAR_COST[name] * n
             else:
                 # vector libm exists (e.g. XLA:TPU): polynomial expansion,
                 # roughly the same op count per *vector* as our kernels
-                total += ovh * VEC_EXPANSION.get(name, 1) * \
-                    math.ceil(n / vreg)
+                total += ovh * VEC_EXPANSION.get(name, 1) * vi(n)
         elif name in ("reduce_sum", "reduce_max", "reduce_min", "argmax",
                       "argmin"):
             inx = eqn.invars[0].aval
             nin = int(np.prod(inx.shape)) if inx.shape else 1
-            total += ovh * math.ceil(nin / vreg)
+            total += ovh * vi(nin)
         else:
-            total += ovh * math.ceil(n / vreg)
+            total += ovh * vi(n)
     return total
 
 

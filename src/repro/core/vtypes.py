@@ -146,6 +146,16 @@ _NEON_TYPES = {
     "float64x2_t": ((2,), jnp.float64),
 }
 
+# Public name: the port frontend (repro.port) keys its register type
+# system off this table.
+NEON_TYPES = _NEON_TYPES
+
+
+def neon_lvec(type_name: str) -> LVec:
+    """The LVec for a NEON register type name (KeyError if unknown)."""
+    shape, dtype = _NEON_TYPES[type_name]
+    return LVec(shape, dtype)
+
 
 def neon_type_table(target: Optional[Union[str, Target]] = None):
     """NEON type -> (LVec, TileMap) for the TPU target — Table 2 analogue.

@@ -66,16 +66,18 @@ def _exp(x):
     return _exp2_poly(f) * two_n
 
 
-def _vtanh_body(x_ref, o_ref, *, out_dtype):
-    x = x_ref[...].astype(jnp.float32)
+# The pure tile math lives in standalone functions so the declared cost
+# models can be *calibrated* against trace.jaxpr_vector_instrs of the
+# very code the kernels execute (tests/test_cost_calibration.py).
+
+def vtanh_math(x):
     t = jnp.clip(jnp.abs(x), 0.0, 20.0)
     z = _exp(-2.0 * t)                       # in (0, 1]
     th = (1.0 - z) / (1.0 + z)
-    o_ref[...] = (jnp.sign(x) * th).astype(out_dtype)
+    return jnp.sign(x) * th
 
 
-def _vsigmoid_body(x_ref, o_ref, *, out_dtype):
-    x = x_ref[...].astype(jnp.float32)
+def vsigmoid_math(x):
     t = jnp.clip(x, -30.0, 30.0)
     z = _exp(-jnp.abs(t))
     den = 1.0 + z
@@ -83,25 +85,41 @@ def _vsigmoid_body(x_ref, o_ref, *, out_dtype):
     r = 1.0 / den  # seed (TPU has a fast vector reciprocal)
     r = r * (2.0 - den * r)
     pos = 1.0 - z * r          # sigma(|t|)
-    out = jnp.where(t >= 0, pos, z * r)
-    o_ref[...] = out.astype(out_dtype)
+    return jnp.where(t >= 0, pos, z * r)
 
 
-def _vsqrt_body(x_ref, o_ref, *, out_dtype):
-    x = x_ref[...].astype(jnp.float32)
+def vsqrt_math(x):
     y = jax.lax.rsqrt(x)                      # vrsqrte seed
     for _ in range(2):                        # vrsqrts Newton ladder
         y = y * (1.5 - 0.5 * x * y * y)
     s = x * y
     s = jnp.where(x == 0.0, 0.0, s)
-    s = jnp.where(jnp.isinf(x), jnp.inf, s)
-    o_ref[...] = s.astype(out_dtype)
+    return jnp.where(jnp.isinf(x), jnp.inf, s)
+
+
+def vrelu_math(x, clamp_min, clamp_max):
+    return jnp.clip(x, jnp.asarray(clamp_min, x.dtype),
+                    jnp.asarray(clamp_max, x.dtype))
+
+
+def _vtanh_body(x_ref, o_ref, *, out_dtype):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = vtanh_math(x).astype(out_dtype)
+
+
+def _vsigmoid_body(x_ref, o_ref, *, out_dtype):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = vsigmoid_math(x).astype(out_dtype)
+
+
+def _vsqrt_body(x_ref, o_ref, *, out_dtype):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = vsqrt_math(x).astype(out_dtype)
 
 
 def _vrelu_body(x_ref, o_ref, *, clamp_min, clamp_max, out_dtype):
     x = x_ref[...]
-    o_ref[...] = jnp.clip(x, jnp.asarray(clamp_min, x.dtype),
-                          jnp.asarray(clamp_max, x.dtype)).astype(out_dtype)
+    o_ref[...] = vrelu_math(x, clamp_min, clamp_max).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -167,11 +185,30 @@ def _ew_cost(ops_per_vec):
     return cost
 
 
-# instruction counts read off the kernel bodies above
-cost_vtanh = _ew_cost(22)     # exp2 poly(10) + reduction(6) + rational(6)
-cost_vsigmoid = _ew_cost(24)
-cost_vsqrt = _ew_cost(12)     # seed + 2 Newton x4 + fixups
-cost_vrelu = _ew_cost(2)      # min + max
+# declared ops/vreg, read off the kernel bodies above — the single
+# source for both the registered cost models and CALIBRATION, so the
+# two cannot drift apart
+DECLARED_OPS_PER_VREG = {
+    "vtanh": 22,      # exp2 poly(10) + reduction(6) + rational(6)
+    "vsigmoid": 24,
+    "vsqrt": 12,      # seed + 2 Newton x4 + fixups
+    "vrelu": 2,       # min + max
+}
+
+cost_vtanh = _ew_cost(DECLARED_OPS_PER_VREG["vtanh"])
+cost_vsigmoid = _ew_cost(DECLARED_OPS_PER_VREG["vsigmoid"])
+cost_vsqrt = _ew_cost(DECLARED_OPS_PER_VREG["vsqrt"])
+cost_vrelu = _ew_cost(DECLARED_OPS_PER_VREG["vrelu"])
+
+# (tile math, declared ops/vreg) pairs: the calibration tests assert the
+# declared numbers against trace.jaxpr_vector_instrs of the same code
+CALIBRATION = {
+    "vtanh": (vtanh_math, DECLARED_OPS_PER_VREG["vtanh"]),
+    "vsigmoid": (vsigmoid_math, DECLARED_OPS_PER_VREG["vsigmoid"]),
+    "vsqrt": (vsqrt_math, DECLARED_OPS_PER_VREG["vsqrt"]),
+    "vrelu": (lambda x: vrelu_math(x, 0.0, 6.0),
+              DECLARED_OPS_PER_VREG["vrelu"]),
+}
 
 
 def supports(x, *a, **kw) -> bool:

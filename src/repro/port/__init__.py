@@ -1,0 +1,134 @@
+"""repro.port — the NEON-source migration frontend.
+
+The paper's primary task is *automated migration* of legacy NEON
+intrinsic code: SIMDe ingests real C kernels and maps their types and
+functions onto the target's vector architecture.  This package is that
+frontend for the repo's logical ISA:
+
+    C NEON kernel --cparse--> AST --lower--> typed SSA IR
+        --intrinsics--> logical-ISA calls --interp--> registry.dispatch
+                                                (cost-driven selection)
+
+``compile_kernel`` turns source into a callable that executes on jnp
+arrays; ``report`` emits the paper's §4 analysis tables (per-intrinsic
+substitution/tier/instruction-count across the RVV width family).
+
+    >>> from repro import port
+    >>> k = port.compile_kernel(open("examples/neon_corpus/vadd.c").read())
+    >>> out = k(n, a, b, out_buf)                    # runs the kernel
+    >>> rep = port.report(k, n, a, b, out_buf)       # migration report
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from . import cparse, intrinsics, interp, ir, lower
+from .cparse import ParseError, parse
+from .interp import ExecError, Machine
+from .intrinsics import UnknownIntrinsic, resolve
+from .ir import TFunction
+from .lower import LowerError, lower_function
+from .report import PORT_SWEEP, format_report
+from .report import report as _report
+
+__all__ = [
+    "PortedKernel", "compile_kernel", "compile_file", "load_corpus",
+    "report", "format_report", "PORT_SWEEP",
+    "parse", "lower_function", "resolve",
+    "ParseError", "LowerError", "ExecError", "UnknownIntrinsic",
+]
+
+
+class PortedKernel:
+    """A NEON kernel compiled onto the logical ISA.
+
+    Calling it runs the kernel: pass one Python value per C parameter in
+    order — ints for ``size_t``/scalar params, 1-D arrays for pointer
+    params.  The return value is the final contents of the written-to
+    buffer(s) (functional out-params).
+    """
+
+    def __init__(self, fn: TFunction):
+        self.fn = fn
+
+    @property
+    def name(self) -> str:
+        return self.fn.name
+
+    @property
+    def param_names(self):
+        return [p.hint for p in self.fn.params]
+
+    def __call__(self, *args, policy: Optional[str] = "pallas",
+                 target=None):
+        return Machine(self.fn, policy=policy, target=target).run(*args)
+
+    def estimate(self, *args, policy: Optional[str] = "pallas",
+                 target=None) -> Dict:
+        """Estimated dynamic vector-instruction counts for these example
+        args: abstract interpretation — scalar control flow runs, every
+        vector issue becomes a selection-cache cost lookup."""
+        return Machine(self.fn, policy=policy, target=target,
+                       abstract=True).run(*args)
+
+    def substitution(self, target) -> Dict[str, bool]:
+        """Table 2 for this kernel: per intrinsic, does its fixed-width
+        register map natively onto ``target`` (``vlen >= width``)?"""
+        from repro.core import targets as _targets
+        tgt = _targets.get_target(target)
+        return {ins.attrs["intrinsic"]:
+                tgt.supports_width(ins.attrs["width_bits"])
+                for ins in self.fn.intrinsic_sites()}
+
+    def pretty(self) -> str:
+        return self.fn.pretty()
+
+    def __repr__(self):
+        return (f"PortedKernel({self.name!r}, params="
+                f"{self.param_names}, writes={self.fn.writes})")
+
+
+def compile_kernel(source: str, name: Optional[str] = None) -> PortedKernel:
+    """Parse + type + translate one kernel from C source.
+
+    ``name`` selects a function when the translation unit defines
+    several (default: the only one, or error).
+    """
+    fns = parse(source)
+    if not fns:
+        raise ParseError("no function definition found")
+    if name is None:
+        if len(fns) > 1:
+            raise ParseError(
+                f"source defines {[f.name for f in fns]}; pass name=")
+        fdef = fns[0]
+    else:
+        try:
+            fdef = next(f for f in fns if f.name == name)
+        except StopIteration:
+            raise ParseError(f"no function {name!r} in source "
+                             f"(found {[f.name for f in fns]})")
+    return PortedKernel(lower_function(fdef, source=source))
+
+
+def compile_file(path: str, name: Optional[str] = None) -> PortedKernel:
+    with open(path) as f:
+        return compile_kernel(f.read(), name=name)
+
+
+def load_corpus(dirpath: str) -> Dict[str, PortedKernel]:
+    """Compile every ``.c`` file in a corpus directory (sorted)."""
+    out: Dict[str, PortedKernel] = {}
+    for fname in sorted(os.listdir(dirpath)):
+        if fname.endswith(".c"):
+            k = compile_file(os.path.join(dirpath, fname))
+            out[k.name] = k
+    return out
+
+
+def report(kernel, *example_args, **kw) -> Dict:
+    """Migration report; accepts a PortedKernel or raw C source."""
+    if isinstance(kernel, str):
+        kernel = compile_kernel(kernel)
+    return _report(kernel, *example_args, **kw)

@@ -1,0 +1,368 @@
+"""IR interpreter: the executable backend of the port frontend.
+
+Two modes over the same typed SSA:
+
+* **concrete** — runs the kernel on real arrays.  Every translated
+  intrinsic issues through :func:`repro.core.registry.dispatch`, so the
+  PR-1 cost-driven selector chooses each op's lowering under the active
+  (or requested) target, and execution inside :func:`trace.count`
+  accumulates the paper's dynamic instruction counts for free.
+* **abstract** — runs only the *scalar* control flow concretely (loop
+  trip counts, pointer walks) and replaces every vector issue with a
+  selection-cache lookup (:meth:`registry._Registry.cost_of`), giving
+  the estimated dynamic vector-instruction count and per-intrinsic
+  tier choices without touching the FPU.  This is what ``port.report``
+  sweeps across the rvv-64..1024 family.
+
+Memory model: each pointer parameter names a 1-D buffer; a pointer value
+is ``(buffer name, element offset)``; stores are functional updates of
+the buffer table (single-writer buffers — the subset's kernels never
+alias).  Offsets are passed to dispatch as 0-d numpy scalars so the
+selection cache keys on their *type*, not each loop iteration's value.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.registry import REGISTRY
+from .ir import (Block, IfOp, Instr, Loop, PtrType, ScalarType, TFunction,
+                 Value, VecType)
+
+__all__ = ["Machine", "ExecError"]
+
+_MAX_ITERS = 10_000_000     # runaway-loop guard for malformed kernels
+
+# abstract-mode stand-in for scalars produced by vector ops (vaddv,
+# get_lane): consuming one in control flow is a subset violation anyway
+_UNKNOWN_SCALAR = float("nan")
+
+
+class ExecError(RuntimeError):
+    pass
+
+
+def _as_np_index(off: int):
+    # 0-d numpy scalar: hashes into the selection cache as
+    # ('#arr', (), 'int64') instead of a fresh key per offset value
+    return np.int64(off)
+
+
+class Machine:
+    def __init__(self, fn: TFunction, *, policy: Optional[str] = None,
+                 target=None, abstract: bool = False):
+        self.fn = fn
+        self.policy = policy
+        self.target = target
+        self.abstract = abstract
+        self.memory: Dict[str, Any] = {}
+        # abstract-mode accounting: intrinsic name -> row
+        self.stats: Dict[str, Dict[str, Any]] = {}
+        self.scalar_instrs = 0
+
+    # -- public -----------------------------------------------------------
+    def run(self, *args):
+        params = self.fn.params
+        if len(args) != len(params):
+            raise ExecError(f"{self.fn.name} takes {len(params)} args "
+                            f"({', '.join(p.hint for p in params)}), "
+                            f"got {len(args)}")
+        env: Dict[Value, Any] = {}
+        for p, a in zip(params, args):
+            if isinstance(p.type, PtrType):
+                buf = (jax.ShapeDtypeStruct(np.shape(a), _np_dtype(a))
+                       if self.abstract else jnp.asarray(a))
+                if len(buf.shape) != 1:
+                    raise ExecError(f"pointer param {p.hint!r} wants a "
+                                    f"1-D buffer, got shape {buf.shape}")
+                self.memory[p.hint] = buf
+                env[p] = (p.hint, 0)
+            elif isinstance(p.type, ScalarType):
+                env[p] = a if isinstance(a, (int, float, bool)) else \
+                    np.asarray(a).item()
+            else:
+                env[p] = jnp.asarray(a)
+        self.block(self.fn.body, env)
+        outs = [self.memory[p.hint] for p in params
+                if p.hint in self.fn.writes]
+        if self.abstract:
+            return self.report_rows()
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    def report_rows(self) -> Dict[str, Any]:
+        total = sum(r["instrs"] for r in self.stats.values())
+        return {"total_instrs": int(total),
+                "scalar_instrs": int(self.scalar_instrs),
+                "per_intrinsic": dict(sorted(self.stats.items()))}
+
+    # -- dispatch plumbing --------------------------------------------------
+    def _dispatch(self, isa_op: str, *args):
+        return REGISTRY.dispatch(isa_op, *args, policy=self.policy,
+                                 target=self.target)
+
+    def _charge(self, intrinsic: str, isa_op: str, width_bits: int, *args):
+        tier, cost = REGISTRY.cost_of(isa_op, *args, policy=self.policy,
+                                      target=self.target)
+        row = self.stats.setdefault(intrinsic, {
+            "isa_op": isa_op, "width_bits": width_bits, "issues": 0,
+            "instrs": 0, "tier": tier, "cost_per_issue": int(cost or 0)})
+        row["issues"] += 1
+        row["instrs"] += int(cost or 0)
+        row["tier"] = tier
+
+    # -- block / region execution -------------------------------------------
+    def block(self, b: Block, env: Dict[Value, Any]):
+        for ins in b.instrs:
+            if isinstance(ins, Loop):
+                self.loop(ins, env)
+            elif isinstance(ins, IfOp):
+                self.if_op(ins, env)
+            else:
+                self.instr(ins, env)
+
+    def loop(self, ins: Loop, env):
+        carried = [env[v] for v in ins.init]
+        iters = 0
+        while True:
+            env.update(zip(ins.phis, carried))
+            self.block(ins.cond, env)
+            cond = env[ins.cond_value]
+            if isinstance(cond, float) and math.isnan(cond):
+                raise ExecError("loop condition depends on a vector-"
+                                "produced scalar (abstract mode cannot "
+                                "trace data-dependent trip counts)")
+            if not cond:
+                break
+            self.block(ins.body, env)
+            carried = [env[y] for y in ins.yields]
+            iters += 1
+            if iters > _MAX_ITERS:
+                raise ExecError(f"loop exceeded {_MAX_ITERS} iterations")
+        env.update(zip(ins.results, carried))
+
+    def if_op(self, ins: IfOp, env):
+        cond = env[ins.cond_value]
+        if _is_nan(cond):
+            raise ExecError("branch condition depends on a vector-"
+                            "produced scalar (abstract mode cannot trace "
+                            "data-dependent control flow)")
+        if cond:
+            self.block(ins.then, env)
+            vals = [env[y] for y in ins.then_yields]
+        else:
+            self.block(ins.els, env)
+            vals = [env[y] for y in ins.els_yields]
+        env.update(zip(ins.results, vals))
+
+    # -- straight-line instructions ------------------------------------------
+    def instr(self, ins: Instr, env):  # noqa: C901
+        op = ins.op
+        if op == "const":
+            env[ins.result] = ins.attrs["value"]
+        elif op == "sbin":
+            self.scalar_instrs += 1
+            a, b = env[ins.args[0]], env[ins.args[1]]
+            # the unknown-scalar sentinel must survive every scalar op
+            # (an int() coercion would crash or, worse, collapse it to a
+            # concrete value and silently corrupt abstract estimates)
+            env[ins.result] = (_UNKNOWN_SCALAR if _is_nan(a) or _is_nan(b)
+                               else _sbin(ins.attrs["op"], a, b))
+        elif op == "scmp":
+            self.scalar_instrs += 1
+            a, b = env[ins.args[0]], env[ins.args[1]]
+            env[ins.result] = (_UNKNOWN_SCALAR if _is_nan(a) or _is_nan(b)
+                               else _scmp(ins.attrs["op"], a, b))
+        elif op == "sneg":
+            env[ins.result] = -env[ins.args[0]]
+        elif op == "snot":
+            v = env[ins.args[0]]
+            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else not v
+        elif op == "sinv":
+            v = env[ins.args[0]]
+            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else ~int(v)
+        elif op == "sselect":
+            c, a, b = (env[v] for v in ins.args)
+            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(c) else \
+                (a if c else b)
+        elif op == "scast":
+            v = env[ins.args[0]]
+            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else \
+                _scast(v, ins.result.type.dtype)
+        elif op == "ptradd":
+            buf, off = env[ins.args[0]]
+            delta = env[ins.args[1]]
+            if _is_nan(delta):
+                raise ExecError(
+                    "pointer displacement depends on a vector-produced "
+                    "scalar (abstract mode cannot trace data-dependent "
+                    "addressing)")
+            env[ins.result] = (buf, off + int(delta))
+        elif op == "ptrcast":
+            env[ins.result] = env[ins.args[0]]
+        elif op == "sload":
+            buf, off = env[ins.args[0]]
+            self.scalar_instrs += 1
+            env[ins.result] = (_UNKNOWN_SCALAR if self.abstract else
+                               np.asarray(self.memory[buf][off]).item())
+        elif op == "sstore":
+            buf, off = env[ins.args[0]]
+            self.scalar_instrs += 1
+            if not self.abstract:
+                val = env[ins.args[1]]
+                dt = self.memory[buf].dtype
+                self.memory[buf] = self.memory[buf].at[off].set(
+                    jnp.asarray(val, dt))
+        elif op == "intrin":
+            self.intrin(ins, env)
+        else:
+            raise ExecError(f"unknown IR op {op!r}")
+
+    # -- intrinsic issue -------------------------------------------------
+    def intrin(self, ins: Instr, env):  # noqa: C901
+        kind = ins.attrs["kind"]
+        isa_op = ins.attrs["isa_op"]
+        name = ins.attrs["intrinsic"]
+        width = ins.attrs["width_bits"]
+        rty = ins.result.type if ins.result is not None else None
+
+        def abstract_reg(ty: VecType):
+            return jax.ShapeDtypeStruct((ty.lanes,), ty.dtype)
+
+        if kind == "get_lane":
+            # register -> scalar move: executor-native, one scalar op
+            self.scalar_instrs += 1
+            if self.abstract:
+                env[ins.result] = _UNKNOWN_SCALAR
+            else:
+                vec, lane = env[ins.args[0]], int(env[ins.args[1]])
+                env[ins.result] = np.asarray(vec[lane]).item()
+            return
+
+        # build the logical-ISA argument list per intrinsic family
+        if kind == "vv":
+            args = [env[v] if not self.abstract else abstract_reg(v.type)
+                    for v in ins.args]
+        elif kind == "dup":
+            x = env[ins.args[0]]
+            x = np.dtype(jnp.dtype(rty.dtype)).type(0 if self.abstract and
+                                                    _is_nan(x) else x)
+            args = [x, (rty.lanes,)]
+        elif kind == "load":
+            buf, off = env[ins.args[0]]
+            args = [self.memory[buf], _as_np_index(off), rty.lanes]
+        elif kind == "load_dup":
+            buf, off = env[ins.args[0]]
+            if self.abstract:
+                x = np.dtype(jnp.dtype(rty.dtype)).type(0)
+            else:
+                x = np.dtype(jnp.dtype(rty.dtype)).type(
+                    np.asarray(self.memory[buf][off]).item())
+            self.scalar_instrs += 1          # the one-lane load
+            args = [x, (rty.lanes,)]
+        elif kind == "store":
+            buf, off = env[ins.args[0]]
+            val = (abstract_reg(ins.args[1].type) if self.abstract
+                   else env[ins.args[1]])
+            args = [self.memory[buf], _as_np_index(off), val]
+        elif kind == "shift":
+            vec = (abstract_reg(ins.args[0].type) if self.abstract
+                   else env[ins.args[0]])
+            args = [vec, int(env[ins.args[1]])]
+        elif kind == "ext":
+            a = (abstract_reg(ins.args[0].type) if self.abstract
+                 else env[ins.args[0]])
+            b = (abstract_reg(ins.args[1].type) if self.abstract
+                 else env[ins.args[1]])
+            args = [a, b, int(env[ins.args[2]])]
+        elif kind == "reduce":
+            args = [abstract_reg(ins.args[0].type) if self.abstract
+                    else env[ins.args[0]]]
+        elif kind == "cvt":
+            vec = (abstract_reg(ins.args[0].type) if self.abstract
+                   else env[ins.args[0]])
+            args = [vec, jnp.dtype(rty.dtype)]
+        else:
+            raise ExecError(f"unknown intrinsic kind {kind!r}")
+
+        if self.abstract:
+            self._charge(name, isa_op, width, *args)
+            if kind == "store":
+                return
+            if kind == "reduce":
+                env[ins.result] = _UNKNOWN_SCALAR
+            else:
+                env[ins.result] = abstract_reg(rty)
+            return
+
+        out = self._dispatch(isa_op, *args)
+        if kind == "store":
+            buf, _ = env[ins.args[0]]
+            self.memory[buf] = out
+        elif kind == "reduce":
+            env[ins.result] = np.asarray(out).item()
+        else:
+            # NEON semantics fix the result register type statically;
+            # keep weakly-typed jnp results honest about it
+            if hasattr(out, "dtype") and out.dtype != jnp.dtype(rty.dtype):
+                out = out.astype(rty.dtype)
+            env[ins.result] = out
+
+
+# ---------------------------------------------------------------------------
+# scalar helpers
+# ---------------------------------------------------------------------------
+
+def _is_nan(x) -> bool:
+    return isinstance(x, float) and math.isnan(x)
+
+
+def _np_dtype(a):
+    return getattr(a, "dtype", None) or np.asarray(a).dtype
+
+
+def _sbin(op: str, a, b):
+    if op == "+":
+        return a + b
+    if op == "-":
+        return a - b
+    if op == "*":
+        return a * b
+    if op == "/":
+        if isinstance(a, int) and isinstance(b, int):
+            return int(math.trunc(a / b))       # C integer division
+        return a / b
+    if op == "%":
+        return math.fmod(a, b) if isinstance(a, float) or \
+            isinstance(b, float) else int(math.fmod(a, b))
+    if op == "<<":
+        return int(a) << int(b)
+    if op == ">>":
+        return int(a) >> int(b)
+    if op == "&":
+        return int(a) & int(b)
+    if op == "|":
+        return int(a) | int(b)
+    if op == "^":
+        return int(a) ^ int(b)
+    if op == "&&":
+        return bool(a) and bool(b)
+    if op == "||":
+        return bool(a) or bool(b)
+    raise ExecError(f"unknown scalar op {op!r}")
+
+
+def _scmp(op: str, a, b) -> bool:
+    return {"==": a == b, "!=": a != b, "<": a < b, ">": a > b,
+            "<=": a <= b, ">=": a >= b}[op]
+
+
+def _scast(v, dtype: str):
+    if dtype.startswith("float"):
+        return float(np.dtype(dtype).type(v))
+    if dtype == "bool":
+        return bool(v)
+    return int(np.dtype(dtype).type(v))

@@ -1,0 +1,194 @@
+"""The NEON intrinsic surface the port frontend understands.
+
+``resolve(name)`` decodes a NEON intrinsic name (``vaddq_f32``,
+``vld1q_dup_u8``, ``vget_high_f32``, ...) into an :class:`IntrinSpec`:
+the logical-ISA op it translates to (:mod:`repro.core.isa`), the typed
+signature in Table-2 register types, and the fixed-width logical
+register the ``vlen >= width`` substitution rule must check.  This is
+the migration frontend's analogue of SIMDe's per-intrinsic conversion
+entries — except the *implementation* is not chosen here: translation
+emits a logical-ISA call and the cost-driven selector
+(:mod:`repro.core.registry`) picks the lowering per target.
+
+The name grammar handled::
+
+    v<base>[q]_<elem>             vaddq_f32, vpadd_f32, vceq_u8 ...
+    v<base>[q]_n_<elem>           vdupq_n_f32, vshrq_n_s32 ...
+    vld1[q]_<elem>                unit-stride load
+    vld1[q]_dup_<elem>            load-one + broadcast
+    vst1[q]_<elem>                unit-stride store
+    vget_{high,low}_<elem>        Q -> D halves (paper Listing 5)
+    vcombine_<elem>               D + D -> Q
+    vext[q]_<elem>                register-pair extract
+    v{addv,maxv,minv}[q]_<elem>   horizontal reductions
+    vcvt[q]_<to>_<from>           lane-wise conversion
+    vget[q]_lane_<elem>           lane extract to scalar
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from .ir import IRType, PtrType, ScalarType, VecType
+
+__all__ = ["IntrinSpec", "resolve", "UnknownIntrinsic"]
+
+
+class UnknownIntrinsic(KeyError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class IntrinSpec:
+    name: str                       # source spelling
+    isa_op: str                     # repro.core.isa op it lowers to
+    kind: str                       # executor strategy (see interp.py)
+    arg_types: Tuple[object, ...]   # IRType | 'imm' per C argument
+    result_type: Optional[IRType]   # None for stores
+    width_bits: int                 # Table-2 logical register width
+
+
+_ELEM = {"f16": "float16", "f32": "float32", "f64": "float64",
+         "s8": "int8", "s16": "int16", "s32": "int32", "s64": "int64",
+         "u8": "uint8", "u16": "uint16", "u32": "uint32", "u64": "uint64"}
+
+# base -> isa op, for same-shape lane-wise families
+_UNARY = {"abs": "vabs", "neg": "vneg", "recpe": "vrecpe",
+          "rsqrte": "vrsqrte", "rev64": "vrev64", "rbit": "vrbit"}
+_BINARY = {"add": "vadd", "sub": "vsub", "mul": "vmul", "max": "vmax",
+           "min": "vmin", "and": "vand", "orr": "vorr", "eor": "veor",
+           "recps": "vrecps", "rsqrts": "vrsqrts", "padd": "vpadd"}
+_TERNARY = {"mla": "vmla", "mls": "vmls", "fma": "vfma"}
+_CMP = {"ceq": "vceq", "cgt": "vcgt", "cge": "vcge",
+        "clt": "vclt", "cle": "vcle"}
+_REDUCE = {"addv": "vaddv", "maxv": "vmaxv", "minv": "vminv"}
+
+
+def _ebits(dtype: str) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def _vt(dtype: str, q: bool) -> VecType:
+    lanes = (128 if q else 64) // _ebits(dtype)
+    return VecType(f"{dtype}x{lanes}_t")
+
+
+def resolve(name: str) -> IntrinSpec:
+    spec = _resolve(name)
+    if spec is None:
+        raise UnknownIntrinsic(name)
+    return spec
+
+
+def _resolve(name: str) -> Optional[IntrinSpec]:  # noqa: C901
+    if not name.startswith("v"):
+        return None
+
+    # vget_high_f32 / vget_low_f32 — Q register halves (Listing 5)
+    m = re.match(r"^vget_(high|low)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        q, d = _vt(dt, True), _vt(dt, False)
+        return IntrinSpec(name, f"vget_{m.group(1)}", "vv", (q,), d, q.bits)
+
+    # vcombine_f32 — D + D -> Q
+    m = re.match(r"^vcombine_([a-z0-9]+)$", name)
+    if m and m.group(1) in _ELEM:
+        dt = _ELEM[m.group(1)]
+        q, d = _vt(dt, True), _vt(dt, False)
+        return IntrinSpec(name, "vcombine", "vv", (d, d), q, q.bits)
+
+    # vget[q]_lane — lane extract to scalar (executor-native move)
+    m = re.match(r"^vget(q?)_lane_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        return IntrinSpec(name, "", "get_lane", (v, "imm"),
+                          ScalarType(dt), v.bits)
+
+    # vld1[q][_dup]
+    m = re.match(r"^vld1(q?)(_dup)?_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        dt = _ELEM[m.group(3)]
+        v = _vt(dt, m.group(1) == "q")
+        kind = "load_dup" if m.group(2) else "load"
+        return IntrinSpec(name, "vld1" if kind == "load" else "vdup",
+                          kind, (PtrType(dt),), v, v.bits)
+
+    # vst1[q]
+    m = re.match(r"^vst1(q?)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        return IntrinSpec(name, "vst1", "store", (PtrType(dt), v),
+                          None, v.bits)
+
+    # vdup[q]_n / vmov[q]_n — scalar broadcast
+    m = re.match(r"^v(?:dup|mov)(q?)_n_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        return IntrinSpec(name, "vdup", "dup", (ScalarType(dt),), v, v.bits)
+
+    # immediate shifts: vshl[q]_n / vshr[q]_n
+    m = re.match(r"^v(shl|shr)(q?)_n_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        dt = _ELEM[m.group(3)]
+        v = _vt(dt, m.group(2) == "q")
+        return IntrinSpec(name, f"v{m.group(1)}_n", "shift", (v, "imm"),
+                          v, v.bits)
+
+    # vext[q]
+    m = re.match(r"^vext(q?)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        return IntrinSpec(name, "vext", "ext", (v, v, "imm"), v, v.bits)
+
+    # conversions: vcvt[q]_<to>_<from>
+    m = re.match(r"^vcvt(q?)_([a-z0-9]+)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM and m.group(3) in _ELEM:
+        to, frm = _ELEM[m.group(2)], _ELEM[m.group(3)]
+        q = m.group(1) == "q"
+        vin, vout = _vt(frm, q), _vt(to, q)
+        if vin.lanes != vout.lanes:
+            return None          # narrowing/widening cvt not in subset
+        return IntrinSpec(name, "vcvt", "cvt", (vin,), vout, vout.bits)
+
+    # horizontal reductions
+    m = re.match(r"^v(addv|maxv|minv)(q?)_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        dt = _ELEM[m.group(3)]
+        v = _vt(dt, m.group(2) == "q")
+        return IntrinSpec(name, _REDUCE[m.group(1)], "reduce", (v,),
+                          ScalarType(dt), v.bits)
+
+    # vbsl[q] — mask select: (umask, a, b)
+    m = re.match(r"^vbsl(q?)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        q = m.group(1) == "q"
+        v = _vt(dt, q)
+        mask = _vt(f"uint{_ebits(dt)}", q)
+        return IntrinSpec(name, "vbsl", "vv", (mask, v, v), v, v.bits)
+
+    # lane-wise families: v<base>[q]_<elem> (lazy base so the optional
+    # q register marker is not swallowed by the base name)
+    m = re.match(r"^v([a-z]+?)(q?)_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        base, q, dt = m.group(1), m.group(2) == "q", _ELEM[m.group(3)]
+        v = _vt(dt, q)
+        if base in _UNARY:
+            return IntrinSpec(name, _UNARY[base], "vv", (v,), v, v.bits)
+        if base in _BINARY:
+            return IntrinSpec(name, _BINARY[base], "vv", (v, v), v, v.bits)
+        if base in _TERNARY:
+            return IntrinSpec(name, _TERNARY[base], "vv", (v, v, v),
+                              v, v.bits)
+        if base in _CMP:
+            mask = _vt(f"uint{_ebits(dt)}", q)
+            return IntrinSpec(name, _CMP[base], "vv", (v, v), mask, v.bits)
+    return None

@@ -1,0 +1,222 @@
+"""A small typed SSA IR for ported NEON kernels.
+
+Values are immutable and single-assignment; control flow is *structured*
+(scf-style loop/if regions with explicit loop-carried values) rather
+than a CFG with phi nodes — the corpus subset has no irreducible flow,
+and structured regions interpret directly.
+
+The type system carries the paper's Table-2 NEON register types
+(:data:`repro.core.vtypes.NEON_TYPES`): every vector-valued instruction
+knows the fixed-width logical register it manipulates, which is what the
+``vlen >= width`` substitution rule consumes at translation time.
+
+Instruction set:
+
+  const            — literal scalar
+  sbin/scmp/sneg…  — scalar arithmetic on loop counters and addresses
+  scast            — scalar conversion
+  sselect          — scalar ternary
+  ptradd           — pointer displacement (element units)
+  sload/sstore     — scalar memory access through a pointer
+  intrin           — a translated NEON intrinsic: attrs carry the source
+                     name, the target logical-ISA op, and the register
+                     width; execution routes through registry.dispatch
+  loop             — while-style region with loop-carried values
+  if               — two-armed region yielding merged values
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.core.vtypes import LVec, NEON_TYPES, neon_lvec
+
+__all__ = [
+    "VecType", "ScalarType", "PtrType", "IRType", "vec_type",
+    "Value", "Instr", "Loop", "IfOp", "Block", "TFunction",
+]
+
+
+# ---------------------------------------------------------------------------
+# Types
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VecType:
+    """A NEON register type (Table 2): name + lane layout."""
+    name: str                      # 'float32x4_t'
+
+    @property
+    def lvec(self) -> LVec:
+        return neon_lvec(self.name)
+
+    @property
+    def lanes(self) -> int:
+        return NEON_TYPES[self.name][0][0]
+
+    @property
+    def dtype(self):
+        return NEON_TYPES[self.name][1]
+
+    @property
+    def bits(self) -> int:
+        return self.lanes * jnp.dtype(self.dtype).itemsize * 8
+
+    def __str__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarType:
+    dtype: str                     # 'float32', 'int64', 'bool', ...
+
+    def __str__(self):
+        return self.dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class PtrType:
+    elem: str                      # element dtype name
+    const: bool = False
+
+    def __str__(self):
+        c = "const " if self.const else ""
+        return f"{c}{self.elem}*"
+
+
+IRType = Union[VecType, ScalarType, PtrType]
+
+
+def vec_type(name: str) -> VecType:
+    if name not in NEON_TYPES:
+        raise KeyError(f"not a Table-2 NEON register type: {name!r}")
+    return VecType(name)
+
+
+# ---------------------------------------------------------------------------
+# Values and instructions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Value:
+    """An SSA value.  Identity (not id number) is the key — Values are
+    compared by object identity so region rebuilds can't collide."""
+    id: int
+    type: IRType
+    hint: str = ""
+
+    def __str__(self):
+        h = f".{self.hint}" if self.hint else ""
+        return f"%{self.id}{h}"
+
+
+@dataclasses.dataclass(eq=False)
+class Instr:
+    op: str
+    args: Tuple[Value, ...]
+    result: Optional[Value] = None
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(eq=False)
+class Block:
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(eq=False)
+class Loop(Instr):
+    """While-style region.  ``phis`` are the loop-carried SSA values,
+    visible to both the condition and body blocks; each iteration
+    evaluates ``cond`` (producing ``cond_value``), runs ``body``, and
+    re-binds the phis to ``yields``.  ``results`` are the phi values
+    observable after exit."""
+    phis: List[Value] = dataclasses.field(default_factory=list)
+    init: List[Value] = dataclasses.field(default_factory=list)
+    cond: Block = dataclasses.field(default_factory=Block)
+    cond_value: Optional[Value] = None
+    body: Block = dataclasses.field(default_factory=Block)
+    yields: List[Value] = dataclasses.field(default_factory=list)
+    results: List[Value] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(eq=False)
+class IfOp(Instr):
+    cond_value: Optional[Value] = None
+    then: Block = dataclasses.field(default_factory=Block)
+    then_yields: List[Value] = dataclasses.field(default_factory=list)
+    els: Block = dataclasses.field(default_factory=Block)
+    els_yields: List[Value] = dataclasses.field(default_factory=list)
+    results: List[Value] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(eq=False)
+class TFunction:
+    """A typed, translated kernel: C params become SSA params; pointer
+    params double as named memory buffers in the interpreter."""
+    name: str
+    params: List[Value]
+    body: Block
+    # pointer params written through vst1/sstore — the kernel's outputs
+    writes: List[str] = dataclasses.field(default_factory=list)
+    source: str = ""
+
+    # -- introspection ------------------------------------------------------
+    def intrinsic_sites(self) -> List[Instr]:
+        """Every 'intrin' instruction anywhere in the region tree."""
+        out: List[Instr] = []
+
+        def walk(block: Block):
+            for ins in block.instrs:
+                if ins.op == "intrin":
+                    out.append(ins)
+                if isinstance(ins, Loop):
+                    walk(ins.cond)
+                    walk(ins.body)
+                elif isinstance(ins, IfOp):
+                    walk(ins.then)
+                    walk(ins.els)
+
+        walk(self.body)
+        return out
+
+    def pretty(self) -> str:
+        lines = [f"func @{self.name}(" +
+                 ", ".join(f"{p}: {p.type}" for p in self.params) + ")"]
+
+        def emit(block: Block, indent: int):
+            pad = "  " * indent
+            for ins in block.instrs:
+                if isinstance(ins, Loop):
+                    phis = ", ".join(f"{p} = {i}" for p, i in
+                                     zip(ins.phis, ins.init))
+                    lines.append(f"{pad}loop ({phis}) {{")
+                    lines.append(f"{pad} cond:")
+                    emit(ins.cond, indent + 1)
+                    lines.append(f"{pad}  -> {ins.cond_value}")
+                    lines.append(f"{pad} body:")
+                    emit(ins.body, indent + 1)
+                    ys = ", ".join(str(y) for y in ins.yields)
+                    lines.append(f"{pad}  yield {ys}")
+                    rs = ", ".join(str(r) for r in ins.results)
+                    lines.append(f"{pad}}} -> {rs}")
+                elif isinstance(ins, IfOp):
+                    lines.append(f"{pad}if {ins.cond_value} {{")
+                    emit(ins.then, indent + 1)
+                    lines.append(f"{pad}}} else {{")
+                    emit(ins.els, indent + 1)
+                    rs = ", ".join(str(r) for r in ins.results)
+                    lines.append(f"{pad}}} -> {rs}")
+                else:
+                    res = f"{ins.result} = " if ins.result else ""
+                    args = ", ".join(str(a) for a in ins.args)
+                    at = ""
+                    if ins.attrs:
+                        at = " {" + ", ".join(
+                            f"{k}={v}" for k, v in sorted(ins.attrs.items())
+                            if not k.startswith("_")) + "}"
+                    lines.append(f"{pad}{res}{ins.op}({args}){at}")
+
+        emit(self.body, 1)
+        return "\n".join(lines)

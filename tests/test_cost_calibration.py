@@ -1,0 +1,85 @@
+"""Cost-model calibration: the declared per-vreg instruction counts of
+the customized (pallas-tier) lowerings must agree with an independent
+jaxpr analysis of the same kernel math (trace.jaxpr_vector_instrs) —
+the cross-check the ROADMAP wired but never asserted.
+
+A declared model that drifts from the code it describes silently skews
+every selection the registry makes, so the tolerance is deliberately
+tight (within 2x both ways; several models are exact).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import trace, use_target
+from repro.core.registry import REGISTRY
+from repro.kernels import elementwise as ew
+from repro.kernels import ops  # noqa: F401  (registers kernel lowerings)
+
+# trace on an exact whole number of vector registers so ceil() noise
+# cannot blur the per-vreg ratio
+TARGET = "rvv-512"
+
+
+def _per_vreg(fn, x):
+    with use_target(TARGET):
+        n_vregs = max(1, x.size // trace.vreg_for(x.dtype))
+        instrs = trace.jaxpr_vector_instrs(fn, x, scalarize=False,
+                                           union_overhead=False)
+    return instrs / n_vregs
+
+
+@pytest.mark.parametrize("name", sorted(ew.CALIBRATION))
+def test_elementwise_models_calibrated(name):
+    fn, declared = ew.CALIBRATION[name]
+    x = jnp.abs(jnp.linspace(0.1, 4.0, 1024,
+                             dtype=jnp.float32)) + 0.01
+    traced = _per_vreg(fn, x)
+    ratio = traced / declared
+    assert 0.5 <= ratio <= 2.0, \
+        (f"{name}: declared {declared} ops/vreg vs traced {traced:.1f} "
+         f"(ratio {ratio:.2f}) — recalibrate the model")
+
+
+def test_vrbit_customized_model_exact():
+    """The Listing-7 swap network: 3 stages x (2 shifts, 2 ands, 1 or)
+    — the declared 15 must match the traced body exactly."""
+    low = REGISTRY.lowering("vrbit", "pallas")
+    x = jnp.zeros((512,), jnp.uint8)
+    with use_target(TARGET):
+        vregs = x.size // trace.vreg_for(x.dtype)
+        traced = trace.jaxpr_vector_instrs(low.fn, x, scalarize=False,
+                                           union_overhead=False)
+        declared = int(low.cost(x))
+    assert traced == declared == 15 * vregs
+
+
+def test_vceq_customized_model_calibrated():
+    """Listing 6 (mv+mseq+merge): declared 3 ops/vreg within 2x of the
+    traced composition."""
+    low = REGISTRY.lowering("vceq", "pallas")
+    x = jnp.zeros((512,), jnp.int32)
+    with use_target(TARGET):
+        vregs = x.size // trace.vreg_for(x.dtype)
+        traced = trace.jaxpr_vector_instrs(low.fn, x, x, scalarize=False,
+                                           union_overhead=False)
+        declared = int(low.cost(x, x))
+    assert declared == 3 * vregs
+    assert 0.5 <= traced / declared <= 2.0
+
+
+@pytest.mark.parametrize("name,args", [
+    ("vtanh", (jnp.linspace(-3, 3, 2048, dtype=jnp.float32),)),
+    ("vsigmoid", (jnp.linspace(-3, 3, 2048, dtype=jnp.float32),)),
+    ("vsqrt", (jnp.linspace(0.01, 9, 2048, dtype=jnp.float32),)),
+    ("vrelu", (jnp.linspace(-3, 9, 2048, dtype=jnp.float32), 0.0, 6.0)),
+])
+def test_declared_pallas_cost_matches_ew_cost(name, args):
+    """The registered pallas cost is the _ew_cost formula: per-vreg
+    constant x ceil(n/vreg) under the active target."""
+    low = REGISTRY.lowering(name, "pallas")
+    _, per = ew.CALIBRATION[name]
+    x = args[0]
+    with use_target("rvv-128"):
+        want = per * int(np.ceil(x.size / trace.vreg_for(x.dtype)))
+        assert int(low.cost(*args)) == want

@@ -1,0 +1,353 @@
+"""repro.port frontend: tokenizer, parser, intrinsic resolution, SSA
+lowering, typed translation errors, execution through the selector, and
+the migration report."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import port
+from repro.core import trace, use_target
+from repro.port import cparse, intrinsics
+from repro.port.lexer import tokenize
+
+VADD = """
+void vadd(size_t n, const float* a, const float* b, float* y) {
+  for (; n >= 4; n -= 4) {
+    float32x4_t va = vld1q_f32(a); a += 4;
+    float32x4_t vb = vld1q_f32(b); b += 4;
+    vst1q_f32(y, vaddq_f32(va, vb)); y += 4;
+  }
+  for (; n != 0; n -= 1) {
+    *y = *a + *b;
+    a += 1; b += 1; y += 1;
+  }
+}
+"""
+
+
+# ---------------------------------------------------------------------------
+# lexer / parser
+# ---------------------------------------------------------------------------
+
+def test_tokenizer_basics():
+    toks = tokenize("x += 0x1F; // comment\n/* block */ y = 3.5e-2f;")
+    texts = [t.text for t in toks if t.kind != "eof"]
+    assert texts == ["x", "+=", "0x1F", ";", "y", "=", "3.5e-2f", ";"]
+
+
+def test_tokenizer_skips_preprocessor():
+    toks = tokenize("#include <arm_neon.h>\nint x;")
+    assert [t.text for t in toks][:2] == ["int", "x"]
+
+
+def test_parser_shapes():
+    fns = cparse.parse(VADD)
+    assert len(fns) == 1
+    f = fns[0]
+    assert f.name == "vadd"
+    assert [p.name for p in f.params] == ["n", "a", "b", "y"]
+    assert isinstance(f.params[1].type, cparse.Ptr)
+    assert f.params[1].type.const and not f.params[3].type.const
+    loops = [s for s in f.body.stmts if isinstance(s, cparse.For)]
+    assert len(loops) == 2
+
+
+def test_parser_rejects_garbage():
+    with pytest.raises(cparse.ParseError):
+        cparse.parse("void f( {")
+
+
+def test_parser_ternary_and_index():
+    src = """
+    void f(size_t n, const float* x, float* y) {
+      for (size_t i = 0; i < n; i += 1) {
+        y[i] = x[i] > 0.0f ? x[i] : 0.0f;
+      }
+    }
+    """
+    k = port.compile_kernel(src)
+    x = np.asarray([-1.0, 2.0, -3.0, 4.0], np.float32)
+    out = k(4, x, np.zeros(4, np.float32))
+    np.testing.assert_array_equal(np.asarray(out), [0.0, 2.0, 0.0, 4.0])
+
+
+# ---------------------------------------------------------------------------
+# intrinsic resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_binary_q():
+    s = intrinsics.resolve("vaddq_f32")
+    assert s.isa_op == "vadd" and s.width_bits == 128
+    assert s.result_type.name == "float32x4_t"
+    assert all(t.name == "float32x4_t" for t in s.arg_types)
+
+
+def test_resolve_d_register():
+    s = intrinsics.resolve("vadd_f32")
+    assert s.width_bits == 64 and s.result_type.name == "float32x2_t"
+
+
+def test_resolve_structural():
+    hi = intrinsics.resolve("vget_high_f32")
+    assert hi.isa_op == "vget_high"
+    assert hi.arg_types[0].name == "float32x4_t"
+    assert hi.result_type.name == "float32x2_t"
+    comb = intrinsics.resolve("vcombine_u8")
+    assert comb.result_type.name == "uint8x16_t" and comb.width_bits == 128
+    cmp_ = intrinsics.resolve("vcltq_f32")
+    assert cmp_.isa_op == "vclt" and cmp_.result_type.name == "uint32x4_t"
+    dup = intrinsics.resolve("vld1q_dup_f32")
+    assert dup.kind == "load_dup" and dup.isa_op == "vdup"
+
+
+def test_resolve_unknown():
+    with pytest.raises(intrinsics.UnknownIntrinsic):
+        intrinsics.resolve("vqrdmulhq_s16")     # saturating: out of subset
+
+
+# ---------------------------------------------------------------------------
+# lowering / type checking
+# ---------------------------------------------------------------------------
+
+def test_lowering_type_mismatch_rejected():
+    src = """
+    void f(const float* a) {
+      float32x2_t d = vld1_f32(a);
+      float32x4_t q = vaddq_f32(d, d);
+    }
+    """
+    with pytest.raises(port.LowerError, match="expected float32x4_t"):
+        port.compile_kernel(src)
+
+
+def test_lowering_rejects_c_operator_on_register():
+    src = """
+    void f(const float* a, float* y) {
+      float32x4_t v = vld1q_f32(a);
+      v = v + v;
+      vst1q_f32(y, v);
+    }
+    """
+    with pytest.raises(port.LowerError, match="use an intrinsic"):
+        port.compile_kernel(src)
+
+
+def test_lowering_rejects_store_through_const():
+    src = """
+    void f(const float* a) {
+      float32x4_t v = vld1q_f32(a);
+      vst1q_f32(a, v);
+    }
+    """
+    with pytest.raises(port.LowerError, match="const pointer"):
+        port.compile_kernel(src)
+
+
+def test_lowering_unknown_intrinsic_is_coverage_error():
+    src = "void f(const float* a) { float32x4_t v = vfoobarq_f32(a); }"
+    with pytest.raises(port.LowerError, match="vfoobarq_f32"):
+        port.compile_kernel(src)
+
+
+def test_ir_introspection():
+    k = port.compile_kernel(VADD)
+    names = {i.attrs["intrinsic"] for i in k.fn.intrinsic_sites()}
+    assert names == {"vld1q_f32", "vaddq_f32", "vst1q_f32"}
+    assert k.fn.writes == ["y"]
+    txt = k.pretty()
+    assert "loop" in txt and "intrin" in txt and "@vadd" in txt
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _vadd_args(n=11):
+    rng = np.random.default_rng(n)
+    return (n, rng.uniform(-1, 1, n).astype(np.float32),
+            rng.uniform(-1, 1, n).astype(np.float32),
+            np.zeros(n, np.float32))
+
+
+def test_execute_with_scalar_tail():
+    n, a, b, y = _vadd_args(11)
+    out = port.compile_kernel(VADD)(n, a, b, y)
+    np.testing.assert_allclose(np.asarray(out), a + b, rtol=1e-6)
+
+
+def test_execute_policies_agree():
+    """The generic tier is the correctness oracle: every policy must
+    produce the same values."""
+    k = port.compile_kernel(VADD)
+    n, a, b, y = _vadd_args(16)
+    want = np.asarray(k(n, a, b, y, policy="generic"))
+    for policy in ("vector", "pallas"):
+        got = np.asarray(k(n, a, b, y, policy=policy))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_execute_accepts_target():
+    k = port.compile_kernel(VADD)
+    n, a, b, y = _vadd_args(8)
+    out = k(n, a, b, y, target="rvv-256")
+    np.testing.assert_allclose(np.asarray(out), a + b, rtol=1e-6)
+
+
+def test_loop_carried_accumulator():
+    src = """
+    void dot(size_t n, const float* a, const float* b, float* s) {
+      float32x4_t acc = vdupq_n_f32(0.0f);
+      for (; n >= 4; n -= 4) {
+        acc = vfmaq_f32(acc, vld1q_f32(a), vld1q_f32(b));
+        a += 4; b += 4;
+      }
+      *s = vaddvq_f32(acc);
+    }
+    """
+    n = 16
+    a = np.arange(n, dtype=np.float32)
+    b = np.full(n, 0.5, np.float32)
+    out = port.compile_kernel(src)(n, a, b, np.zeros(1, np.float32))
+    np.testing.assert_allclose(np.asarray(out)[0], float(a @ b), rtol=1e-6)
+
+
+def test_estimate_matches_counted_execution():
+    """Abstract estimation and trace.count'ed execution are the same
+    accounting: selection-time costs, summed per dispatch."""
+    k = port.compile_kernel(VADD)
+    n, a, b, y = _vadd_args(24)
+    for tname in ("rvv-128", "rvv-64"):
+        est = k.estimate(n, a, b, y, target=tname)
+        with use_target(tname):
+            with trace.count() as c:
+                k(n, a, b, y, target=tname)
+        assert c["total"] == est["total_instrs"], tname
+
+
+def test_for_init_declaration_does_not_leak_shadowed_name():
+    """A for-scope counter shadowing an outer variable must not leak its
+    final value into the outer binding (C scoping)."""
+    src = """
+    void f(size_t n, const float* x, float* y) {
+      size_t i = 7;
+      for (size_t i = 0; i < n; i += 1) {
+        y[i] = x[i];
+      }
+      y[0] = (float) i;
+    }
+    """
+    x = np.ones(4, np.float32)
+    out = port.compile_kernel(src)(4, x, np.zeros(4, np.float32))
+    assert np.asarray(out)[0] == 7.0
+
+
+def test_nested_shadowing_does_not_hide_carried_updates():
+    """An inner for-scope redeclaration of an outer name must not drop
+    the outer variable from the enclosing loop's carried set."""
+    src = """
+    void f(size_t n, float* y) {
+      size_t k = 0;
+      for (; n >= 1; n -= 1) {
+        k += 1;
+        for (size_t k = 0; k < 1; k += 1) {
+        }
+      }
+      y[0] = (float) k;
+    }
+    """
+    out = port.compile_kernel(src)(5, np.zeros(1, np.float32))
+    assert np.asarray(out)[0] == 5.0
+
+
+def test_hex_literals_parse_correctly():
+    """Hex digits f/F are not float suffixes: 0x1f == 31, 0xFF == 255."""
+    src = """
+    void f(size_t n, const int32_t* x, int32_t* y, int32_t* flag) {
+      int32x4_t vm = vdupq_n_s32(0x1f);
+      for (; n >= 4; n -= 4) {
+        vst1q_s32(y, vandq_s32(vld1q_s32(x), vm));
+        x += 4; y += 4;
+      }
+      flag[0] = 0xFF;
+    }
+    """
+    x = np.arange(100, 108, dtype=np.int32)
+    out_y, out_flag = port.compile_kernel(src)(
+        8, x, np.zeros(8, np.int32), np.zeros(1, np.int32))
+    np.testing.assert_array_equal(np.asarray(out_y), x & 31)
+    assert np.asarray(out_flag)[0] == 255
+
+
+def test_abstract_mode_rejects_data_dependent_trip_count():
+    """Estimates must error, not silently mis-count, when control flow
+    depends on a vector-produced scalar."""
+    src = """
+    void f(size_t n, const float* x, float* y) {
+      float32x4_t v = vld1q_f32(x);
+      float s = vaddvq_f32(v);
+      while (s > 0.5f) {
+        s = s - 1.0f;
+        vst1q_f32(y, v);
+      }
+    }
+    """
+    k = port.compile_kernel(src)
+    x = np.full(4, 1.0, np.float32)
+    # concrete execution is fine (real trip count)
+    k(4, x, np.zeros(4, np.float32))
+    with pytest.raises(port.ExecError, match="vector-produced scalar"):
+        k.estimate(4, x, np.zeros(4, np.float32), target="rvv-128")
+
+
+def test_abstract_mode_rejects_data_dependent_branch():
+    src = """
+    void f(size_t n, const float* x, float* y) {
+      float s = vaddvq_f32(vld1q_f32(x));
+      if (s > 0.0f) {
+        *y = s;
+      }
+    }
+    """
+    k = port.compile_kernel(src)
+    x = np.full(4, 1.0, np.float32)
+    k(4, x, np.zeros(1, np.float32))
+    with pytest.raises(port.ExecError, match="vector-produced scalar"):
+        k.estimate(4, x, np.zeros(1, np.float32), target="rvv-128")
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def test_report_schema_and_substitution():
+    k = port.compile_kernel(VADD)
+    n, a, b, y = _vadd_args(16)
+    rep = port.report(k, n, a, b, y)
+    assert rep["kernel"] == "vadd" and rep["writes"] == ["y"]
+    assert set(rep["targets"]) == set(port.PORT_SWEEP)
+    assert rep["intrinsics"]["vaddq_f32"]["width_bits"] == 128
+    # Table 2: Q-register intrinsics cannot map at vlen=64...
+    assert rep["targets"]["rvv-64"]["maps"]["vaddq_f32"] is False
+    assert rep["targets"]["rvv-128"]["maps"]["vaddq_f32"] is True
+    # ...so the rvv-64 column falls back to the scalar loop and costs more
+    assert rep["targets"]["rvv-64"]["total_instrs"] > \
+        rep["targets"]["rvv-128"]["total_instrs"]
+    row = rep["targets"]["rvv-128"]["per_intrinsic"]["vaddq_f32"]
+    assert row["tier"] == "vector" and row["issues"] > 0
+    assert "speedup" in rep["targets"]["rvv-128"]
+
+
+def test_report_accepts_source_string():
+    n, a, b, y = _vadd_args(16)
+    rep = port.report(VADD, n, a, b, y, sweep=("rvv-128",))
+    assert list(rep["targets"]) == ["rvv-128"]
+
+
+def test_substitution_with_lmul_grouping():
+    """LMUL=2 register grouping makes the 128-bit Q types mappable on a
+    64-bit machine (the grouped register holds vlen*lmul bits)."""
+    k = port.compile_kernel(VADD)
+    sub64 = k.substitution("rvv-64")
+    sub64m2 = k.substitution("rvv-64-m2")
+    assert sub64["vaddq_f32"] is False
+    assert sub64m2["vaddq_f32"] is True

@@ -1,0 +1,93 @@
+"""Corpus acceptance: every NEON kernel in examples/neon_corpus parses,
+translates, executes through registry.dispatch, and matches its NumPy
+reference; the migration sweep reproduces the paper's selection
+structure (Listing 5-7 wins, Listing 8 no-ops, Table-2 fallbacks)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+CORPUS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                      "examples", "neon_corpus"))
+sys.path.insert(0, CORPUS)
+
+import harness  # noqa: E402
+
+from repro import port  # noqa: E402
+
+
+def _case_ids():
+    return [c.kernel for c in harness.cases()]
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    return {c.kernel: port.compile_file(os.path.join(CORPUS, c.file),
+                                        name=c.kernel)
+            for c in harness.cases()}
+
+
+def test_corpus_is_big_enough():
+    assert len(harness.cases()) >= 10
+
+
+@pytest.mark.parametrize("case", harness.cases(), ids=_case_ids())
+def test_corpus_kernel_matches_reference(case, compiled):
+    k = compiled[case.kernel]
+    rng = np.random.default_rng(hash(case.kernel) % 2**32)
+    args = case.make_args(rng)
+    got = k(*args)
+    want = case.reference(*args)
+    np.testing.assert_allclose(np.asarray(got), want,
+                               rtol=case.rtol, atol=case.atol)
+
+
+@pytest.mark.parametrize("kernel", ["xnn_f32_vadd_ukernel",
+                                    "bitreverse_u8", "relu_bsl_f32"])
+def test_corpus_executes_on_rvv_targets(kernel, compiled):
+    """Selection flips per target must not change semantics."""
+    case = next(c for c in harness.cases() if c.kernel == kernel)
+    rng = np.random.default_rng(7)
+    args = case.make_args(rng)
+    want = case.reference(*args)
+    for tname in ("rvv-64", "rvv-128"):
+        got = compiled[kernel](*args, target=tname)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=case.rtol, atol=case.atol,
+                                   err_msg=f"{kernel} on {tname}")
+
+
+@pytest.fixture(scope="module")
+def sweep_reports():
+    from benchmarks import port_suite
+    return port_suite.sweep_corpus()
+
+
+def test_migration_sweep_properties(sweep_reports):
+    from benchmarks import port_suite
+    port_suite.check(sweep_reports)
+
+
+def test_listing_patterns_win_on_rvv128(sweep_reports):
+    """The customized conversions carry the corpus exactly where the
+    paper says: vrbit (Listing 7) is the largest win."""
+    speedups = {name: rep["targets"]["rvv-128"]["speedup"]
+                for name, rep in sweep_reports.items()}
+    assert max(speedups, key=speedups.get) == "bitreverse_u8"
+    assert speedups["bitreverse_u8"] > 4.0
+    assert speedups["relu_bsl_f32"] > 1.5
+    assert speedups["fold_halves_f32"] > 1.5
+
+
+def test_bench_json_emittable(tmp_path, sweep_reports):
+    from benchmarks import port_suite
+    path = port_suite.emit_json(sweep_reports,
+                                str(tmp_path / "BENCH_port.json"))
+    import json
+    with open(path) as f:
+        data = json.load(f)
+    assert data["suite"] == "neon_port_corpus"
+    assert len(data["kernels"]) >= 10
+    row = data["kernels"]["bitreverse_u8"]["targets"]["rvv-64"]
+    assert "vrbitq_u8" in row["unmapped"]

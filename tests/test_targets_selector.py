@@ -282,6 +282,114 @@ def test_broken_cost_model_logs_once(caplog):
     assert c["total"] == 0
 
 
+# ---------------------------------------------------------------------------
+# LMUL>1 register grouping (rvv-*-m2/m4/m8)
+# ---------------------------------------------------------------------------
+
+def test_lmul_variants_registered():
+    for bits in (64, 128, 256, 512, 1024):
+        for m in (2, 4, 8):
+            t = targets.get_target(f"rvv-{bits}-m{m}")
+            assert t.lmul == m and t.vlen == bits
+    assert targets.get_target("rvv-128").lmul == 1
+
+
+def test_lmul_grows_register_group():
+    m1 = targets.get_target("rvv-128")
+    m4 = targets.get_target("rvv-128-m4")
+    assert m4.vreg_elems(jnp.float32) == 4 * m1.vreg_elems(jnp.float32)
+
+
+def test_lmul_widens_mappable_registers():
+    """Grouping relaxes the Table-2 rule: lmul * vlen >= width."""
+    assert not targets.get_target("rvv-64").supports_width(128)
+    assert targets.get_target("rvv-64-m2").supports_width(128)
+    assert targets.get_target("rvv-64-m2").supports_width(256) is False
+    assert targets.get_target("rvv-64-m8").supports_width(512)
+
+
+def test_lmul_does_not_understate_wide_op_cost():
+    """A grouped instruction retires lmul register micro-ops: grouping
+    must not let the cost model claim an lmul-x dynamic speedup, and a
+    part-filled group costs *more* than ungrouped issue."""
+    m1 = targets.get_target("rvv-128")
+    m4 = targets.get_target("rvv-128-m4")
+    # full groups: same total micro-ops either way
+    assert m4.vinstrs(64, jnp.float32) == m1.vinstrs(64, jnp.float32)
+    # one Q register on an LMUL=4 config wastes 3 register passes
+    assert m4.vinstrs(4, jnp.float32) == 4
+    assert m1.vinstrs(4, jnp.float32) == 1
+
+
+def test_lmul_threads_through_traced_cost():
+    x = jnp.zeros((16,), jnp.float32)      # one vreg at m4, 4 at m1
+    f = lambda a: a + a
+    with use_target("rvv-128"):
+        m1_count = trace.jaxpr_vector_instrs(f, x)
+    with use_target("rvv-128-m4"):
+        m4_count = trace.jaxpr_vector_instrs(f, x)
+    assert m1_count == 4 and m4_count == 4   # 1 grouped instr x lmul
+
+
+def test_with_lmul_helper():
+    t = targets.with_lmul("rvv-256", 4)
+    assert t.name == "rvv-256-m4" and t.lmul == 4
+    assert targets.with_lmul(t, 1).name == "rvv-256"
+    with pytest.raises(ValueError):
+        targets.with_lmul("rvv-128", 3)
+    with pytest.raises(ValueError):
+        targets.with_lmul("tpu-v5e", 2)
+
+
+# ---------------------------------------------------------------------------
+# Bounded (LRU) selection cache
+# ---------------------------------------------------------------------------
+
+def test_selection_cache_is_bounded():
+    info = REGISTRY.cache_info()
+    assert info["capacity"] >= 1 and "evictions" in info
+    old_cap = info["capacity"]
+    REGISTRY.cache_clear()
+    try:
+        REGISTRY.set_cache_capacity(3)
+        for i in range(8):
+            REGISTRY.select("vadd", jnp.zeros(4 + i), jnp.zeros(4 + i),
+                            policy="pallas", target="rvv-128")
+        info = REGISTRY.cache_info()
+        assert info["size"] <= 3
+        assert info["evictions"] == 8 - 3
+    finally:
+        REGISTRY.set_cache_capacity(old_cap)
+        REGISTRY.cache_clear()
+
+
+def test_selection_cache_lru_keeps_hot_entries():
+    old_cap = REGISTRY.cache_info()["capacity"]
+    REGISTRY.cache_clear()
+    try:
+        REGISTRY.set_cache_capacity(2)
+        hot = jnp.zeros(100)
+        REGISTRY.select("vadd", hot, hot, policy="pallas",
+                        target="rvv-128")
+        for i in range(4):
+            # touch the hot entry between one-shot fillers: it must
+            # survive every eviction round
+            REGISTRY.select("vadd", jnp.zeros(4 + i), jnp.zeros(4 + i),
+                            policy="pallas", target="rvv-128")
+            before = REGISTRY.cache_info()["hits"]
+            REGISTRY.select("vadd", hot, hot, policy="pallas",
+                            target="rvv-128")
+            assert REGISTRY.cache_info()["hits"] == before + 1
+    finally:
+        REGISTRY.set_cache_capacity(old_cap)
+        REGISTRY.cache_clear()
+
+
+def test_set_cache_capacity_validates():
+    with pytest.raises(ValueError):
+        REGISTRY.set_cache_capacity(0)
+
+
 @pytest.mark.parametrize("shape", [(8,), (3, 8), (2, 3, 8), (2, 2, 3, 8)])
 def test_vget_high_generic_pallas_parity(shape):
     """Generic and customized (slidedown) lowerings agree for any rank —
