@@ -1,22 +1,29 @@
-"""NEON-corpus migration sweep: every ported kernel's estimated dynamic
-vector-instruction count across the RVV width family, baseline (the
-original-SIMDe ``vector`` policy cap) vs cost-driven selection.
+"""NEON-corpus migration sweep + the JIT backend's wall-clock suite.
 
-This is the port-frontend analogue of benchmarks/xnnpack_suite.py: the
-xnnpack suite measures the repo's *hand-written* kernels; this suite
-measures *migrated legacy source* end to end (C NEON in, selections
-out), which is the paper's actual task.  The sweep includes ``rvv-64``
-(where Table 2's 'x' entries force Q-register intrinsics onto the
-scalar loop) and ``rvv-64-m2`` (LMUL=2 register grouping making the
-same intrinsics mappable again — the grouped register holds 128 bits).
+Two measurements per corpus kernel:
 
-  PYTHONPATH=src python benchmarks/port_suite.py        # writes BENCH_port.json
+* **dynamic vector instructions** (the paper's Spike methodology) across
+  the RVV width family — baseline (original-SIMDe ``vector`` policy cap)
+  vs cost-driven selection vs the **re-vectorized** form
+  (``port.revec``: strips re-tiled at VLEN x LMUL with predicated
+  tails).  The fixed-width port costs the same from rvv-128 to rvv-1024
+  — exactly SIMDe's fixed-vlen limitation; the re-tiled column finally
+  diverges, shrinking with the register.
+* **wall clock** — interpreter (one Python dispatch per strip) vs the
+  compiled path (``port.compile``: one jitted ``fori_loop``) vs compiled
+  + re-vectorized, at a serving-realistic buffer size.
+
+  PYTHONPATH=src python benchmarks/port_suite.py          # writes BENCH_port.json
+  PYTHONPATH=src python benchmarks/port_suite.py --check  # + regression gate
+                                                          #   vs committed JSON
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 import sys
+import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CORPUS = os.path.join(ROOT, "examples", "neon_corpus")
@@ -35,10 +42,18 @@ SWEEP = ("rvv-64", "rvv-64-m2", "rvv-128", "rvv-256", "rvv-512",
 LISTING_KERNELS = ("fold_halves_f32", "relu_bsl_f32", "bitreverse_u8")
 # simple arithmetic keeps the vector tier — no win to be had (Listing 8)
 ARITH_KERNELS = ("xnn_f32_vadd_ukernel", "xnn_f32_vmul_ukernel")
+# strip-pattern kernels the re-vectorizer must widen on rvv-1024
+# (fold_halves is the deliberate counter-example: vget_high/low
+# cross-lane structure keeps it at NEON granularity)
+UNSCALABLE = ("fold_halves_f32",)
+
+# wall-clock suite geometry: large enough that the interpreter's
+# per-strip Python dispatch dominates, small enough to keep CI honest
+WALL_N, WALL_TAIL_N = 2048, 2051
 
 
 def sweep_corpus(n=64, seed=0):
-    """port.report for every corpus kernel; returns {kernel: report}."""
+    """port.report (with the revec column) for every corpus kernel."""
     import numpy as np
     out = {}
     for i, case in enumerate(harness.cases(n=n)):
@@ -46,11 +61,84 @@ def sweep_corpus(n=64, seed=0):
                               name=case.kernel)
         rng = np.random.default_rng(seed + i)
         args = case.make_args(rng)
-        out[case.kernel] = port.report(k, *args, sweep=SWEEP)
+        out[case.kernel] = port.report(k, *args, sweep=SWEEP,
+                                       compiled=True)
     return out
 
 
-def check(reports):
+def bench_wall(seed=0, repeats=10):
+    """Wall-clock per kernel: interpreter vs compiled vs compiled+revec.
+
+    The interpreter runs under rvv-128 (the ported fixed width); the
+    compiled path under the same target; the re-vectorized path under
+    rvv-1024 (where re-tiling actually widens the strips).
+    """
+    import numpy as np
+    rows = {}
+    for i, case in enumerate(harness.cases(n=WALL_N, tail_n=WALL_TAIL_N)):
+        k = port.compile_file(os.path.join(CORPUS, case.file),
+                              name=case.kernel)
+        rng = np.random.default_rng(seed + i)
+        args = case.make_args(rng)
+
+        t0 = time.perf_counter()
+        ref_out = k(*args, target="rvv-128")
+        t_interp = time.perf_counter() - t0
+
+        def timed(fn):
+            outs = fn(*args)                      # compile + warmup
+            _block(outs)
+            best = math.inf
+            for _ in range(repeats):
+                t = time.perf_counter()
+                outs = fn(*args)
+                _block(outs)
+                best = min(best, time.perf_counter() - t)
+            return outs, best
+
+        comp = k.compile(target="rvv-128")
+        out_c, t_comp = timed(comp)
+        _assert_close(out_c, ref_out, case)
+
+        rev = k.compile(target="rvv-1024", revec=True)
+        out_r, t_rev = timed(rev)
+        _assert_close(out_r, case.reference(*args), case)
+
+        rows[case.kernel] = {
+            "n": WALL_N,
+            "interp_ms": round(t_interp * 1e3, 3),
+            "compiled_ms": round(t_comp * 1e3, 4),
+            "revec_ms": round(t_rev * 1e3, 4),
+            "compiled_speedup": round(t_interp / t_comp, 1),
+            "revec_speedup": round(t_interp / t_rev, 1),
+            "retile_factor": (rev.retiling.factor
+                              if rev.retiling is not None else 1),
+        }
+    return rows
+
+
+def _block(outs):
+    import numpy as np
+    if isinstance(outs, tuple):
+        for o in outs:
+            np.asarray(o)
+    else:
+        np.asarray(outs)
+
+
+def _assert_close(got, want, case):
+    import numpy as np
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=max(case.rtol, 1e-5),
+                                   atol=max(case.atol, 1e-6),
+                                   err_msg=f"{case.kernel}: compiled "
+                                           f"path diverged")
+
+
+def check(reports, wall=None):
     """Acceptance properties of the migration sweep."""
     assert len(reports) >= 10, f"corpus shrank to {len(reports)} kernels"
     for name in LISTING_KERNELS:
@@ -69,8 +157,56 @@ def check(reports):
     assert vadd["targets"]["rvv-64"]["total_instrs"] > \
         vadd["targets"]["rvv-128"]["total_instrs"]
 
+    # the re-vectorizer: rvv-1024 must finally diverge from rvv-128
+    for name, rep in reports.items():
+        if name in UNSCALABLE:
+            assert rep["targets"]["rvv-1024"]["revec"]["factor"] == 1, \
+                f"{name}: cross-lane kernel must not re-tile"
+            continue
+        r128 = rep["targets"]["rvv-128"]["revec"]
+        r1024 = rep["targets"]["rvv-1024"]["revec"]
+        assert r1024["factor"] == 8, \
+            f"{name}: expected 8x re-tile on rvv-1024, got " \
+            f"{r1024['factor']}x"
+        assert r1024["total_instrs"] < r128["total_instrs"], \
+            f"{name}: rvv-1024 should beat rvv-128 after re-tiling"
 
-def emit_json(reports, path="BENCH_port.json"):
+    if wall is not None:
+        speedups = [row["compiled_speedup"] for row in wall.values()]
+        geomean = math.exp(sum(math.log(s) for s in speedups)
+                           / len(speedups))
+        assert geomean >= 10.0, \
+            f"compiled path geomean speedup {geomean:.1f}x < 10x"
+        assert min(speedups) >= 5.0, \
+            f"slowest compiled kernel only {min(speedups):.1f}x"
+
+
+def check_wall_instrs(reports, n=WALL_N, tail_n=WALL_TAIL_N, seed=0):
+    """At serving size, re-tiled rvv-1024 must retire >= 4x fewer
+    dynamic vector instructions than the fixed-128-bit port for every
+    scalable strip kernel (the ISSUE-3 acceptance bar).  Returns
+    {kernel: ratio}."""
+    import numpy as np
+    ratios = {}
+    for i, case in enumerate(harness.cases(n=n, tail_n=tail_n)):
+        if case.kernel in UNSCALABLE:
+            continue
+        k = port.compile_file(os.path.join(CORPUS, case.file),
+                              name=case.kernel)
+        rng = np.random.default_rng(seed + i)
+        args = case.make_args(rng)
+        fixed = k.estimate(*args, target="rvv-1024")["total_instrs"]
+        rev = k.compile(target="rvv-1024", revec=True).estimate(
+            *args)["total_instrs"]
+        ratios[case.kernel] = round(fixed / max(1, rev), 2)
+        assert ratios[case.kernel] >= 4.0, \
+            f"{case.kernel}: re-tiled rvv-1024 only " \
+            f"{ratios[case.kernel]}x fewer instrs (want >= 4x)"
+    return ratios
+
+
+def emit_json(reports, wall=None, instr_ratios=None,
+              path="BENCH_port.json"):
     data = {"suite": "neon_port_corpus",
             "metric": "dynamic_vector_instructions",
             "sweep": list(SWEEP),
@@ -86,38 +222,106 @@ def emit_json(reports, path="BENCH_port.json"):
                     "baseline_instrs": row["baseline_total_instrs"],
                     "scalar_instrs": row["scalar_instrs"],
                     "speedup": row["speedup"],
+                    "revec_instrs": row["revec"]["total_instrs"],
+                    "retile_factor": row["revec"]["factor"],
+                    "masked_tails": row["revec"]["masked"],
                     "unmapped": sorted(i for i, ok in row["maps"].items()
                                        if not ok)}
                 for t, row in rep["targets"].items()},
         }
+        if wall and name in wall:
+            data["kernels"][name]["wall"] = wall[name]
+        if instr_ratios and name in instr_ratios:
+            data["kernels"][name]["revec_instr_ratio_rvv1024"] = \
+                instr_ratios[name]
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
     return path
 
 
-def main(json_path="BENCH_port.json", differential=True):
+def check_regression(data, baseline_path="BENCH_port.json",
+                     wall_slack=0.25):
+    """Fail if the fresh run regresses against the committed baseline:
+    instruction counts may not grow, and wall-clock speedups may not
+    collapse (CI machines vary, so wall gets ``wall_slack`` headroom on
+    top of the absolute >= 10x floor asserted by :func:`check`)."""
+    if not os.path.exists(baseline_path):
+        print(f"# no committed {baseline_path}; skipping regression gate")
+        return
+    with open(baseline_path) as f:
+        base = json.load(f)
+    problems = []
+    for name, krow in base.get("kernels", {}).items():
+        fresh = data["kernels"].get(name)
+        if fresh is None:
+            problems.append(f"{name}: kernel disappeared from the corpus")
+            continue
+        for t, row in krow.get("targets", {}).items():
+            frow = fresh["targets"].get(t)
+            if frow is None:
+                continue
+            for key in ("total_instrs", "revec_instrs"):
+                if key in row and frow[key] > row[key]:
+                    problems.append(
+                        f"{name}/{t}: {key} {row[key]} -> {frow[key]}")
+        if "wall" in krow and "wall" in fresh:
+            floor = max(10.0, row_speedup(krow) * wall_slack)
+            got = row_speedup(fresh)
+            if got < floor:
+                problems.append(
+                    f"{name}: compiled wall speedup {got:.0f}x below "
+                    f"floor {floor:.0f}x")
+    if problems:
+        raise AssertionError("BENCH_port regression vs committed "
+                             "baseline:\n  " + "\n  ".join(problems))
+    print(f"# regression gate vs {baseline_path}: OK")
+
+
+def row_speedup(krow):
+    return float(krow["wall"]["compiled_speedup"])
+
+
+def main(json_path="BENCH_port.json", differential=True,
+         regression=False):
     if differential:
         print("# corpus differential check (ported vs NumPy reference)")
         count, instrs = harness.run_differential(target="rvv-128")
         print(f"#  {count} kernels match ({instrs} dynamic instrs "
               f"counted)\n")
     reports = sweep_corpus()
-    check(reports)
-    print("# NEON corpus migration sweep "
-          "(baseline ladder / cost-driven, dynamic vector instrs)")
-    print(f"{'kernel':32s}", *(f"{t.replace('rvv-', 'v'):>12s}"
+    print("# wall clock: interpreter vs compiled vs compiled+revec "
+          f"(n={WALL_N})")
+    wall = bench_wall()
+    for name, row in sorted(wall.items()):
+        print(f"{name:34s} {row['interp_ms']:>9.1f}ms "
+              f"{row['compiled_ms']:>8.3f}ms ({row['compiled_speedup']:>7.0f}x) "
+              f"{row['revec_ms']:>8.3f}ms ({row['revec_speedup']:>7.0f}x)")
+    instr_ratios = check_wall_instrs(reports)
+    check(reports, wall)
+    print("\n# NEON corpus migration sweep "
+          "(baseline / cost-driven / re-vectorized dynamic instrs)")
+    print(f"{'kernel':32s}", *(f"{t.replace('rvv-', 'v'):>14s}"
                                for t in SWEEP))
     for name, rep in sorted(reports.items()):
         cells = []
         for t in SWEEP:
             row = rep["targets"][t]
-            cells.append(f"{row['baseline_total_instrs']:>5d}/"
-                         f"{row['total_instrs']:<5d}")
-        print(f"{name:32s}", *(f"{c:>12s}" for c in cells))
-    path = emit_json(reports, json_path)
-    print(f"\n# wrote {path}")
+            cells.append(f"{row['baseline_total_instrs']}/"
+                         f"{row['total_instrs']}/"
+                         f"{row['revec']['total_instrs']}")
+        print(f"{name:32s}", *(f"{c:>14s}" for c in cells))
+    # build the JSON payload first so the regression gate can compare
+    # it against the committed file before overwriting
+    tmp = emit_json(reports, wall, instr_ratios,
+                    path=json_path + ".tmp")
+    with open(tmp) as f:
+        data = json.load(f)
+    if regression:
+        check_regression(data, baseline_path=json_path)
+    os.replace(tmp, json_path)
+    print(f"\n# wrote {json_path}")
     return reports
 
 
 if __name__ == "__main__":
-    main()
+    main(regression="--check" in sys.argv[1:])

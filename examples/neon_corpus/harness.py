@@ -145,6 +145,15 @@ def _ref_vrbit(n, x, y):
     return out
 
 
+def _ref_vqaddsub(n, a, b, ya, ys):
+    outa, outs = ya.copy(), ys.copy()
+    s = np.clip(a[:n].astype(np.int32) + b[:n].astype(np.int32), -128, 127)
+    d = np.clip(a[:n].astype(np.int32) - b[:n].astype(np.int32), -128, 127)
+    outa[:n] = (s + 128).astype(np.uint8)
+    outs[:n] = (d + 128).astype(np.uint8)
+    return outa, outs
+
+
 def _ref_reduce_max(n, x, out_buf):
     out = out_buf.copy()
     out[0] = np.max(x[:n])
@@ -203,6 +212,13 @@ def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
              lambda rng: (n, rng.integers(0, 256, n).astype(np.uint8),
                           np.zeros(n, np.uint8)),
              _ref_vrbit),
+        Case("vqaddsub.c", "qs8_vaddsub_biased_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          np.zeros(tail_n, np.uint8),
+                          np.zeros(tail_n, np.uint8)),
+             _ref_vqaddsub),
         Case("vreduce_max.c", "reduce_max_f32",
              lambda rng: (tail_n, _rand(rng, tail_n), np.zeros(1, F)),
              _ref_reduce_max),

@@ -1,0 +1,31 @@
+/* Saturating qs8 add/sub pair with a biased-unsigned output view: the
+ * XNNPACK qs8-vadd shape plus the classic signed -> biased-u8 trick
+ * (reinterpret the register as u8 and flip the sign bit with veor).
+ * Exercises vqadd/vqsub (RVV vsadd/vssub) and vreinterpret casts:
+ *   ya[i] = (uint8) (sat8(a[i] + b[i]) + 128)
+ *   ys[i] = (uint8) (sat8(a[i] - b[i]) + 128)                        */
+#include <arm_neon.h>
+
+void qs8_vaddsub_biased_ukernel(size_t n, const int8_t* a, const int8_t* b,
+                                uint8_t* ya, uint8_t* ys) {
+  const uint8x16_t vbias = vdupq_n_u8(128);
+  for (; n >= 16; n -= 16) {
+    int8x16_t va = vld1q_s8(a); a += 16;
+    int8x16_t vb = vld1q_s8(b); b += 16;
+    uint8x16_t vsum = vreinterpretq_u8_s8(vqaddq_s8(va, vb));
+    uint8x16_t vdif = vreinterpretq_u8_s8(vqsubq_s8(va, vb));
+    vst1q_u8(ya, veorq_u8(vsum, vbias)); ya += 16;
+    vst1q_u8(ys, veorq_u8(vdif, vbias)); ys += 16;
+  }
+  for (; n != 0; n -= 1) {
+    int32_t s = (int32_t) *a + (int32_t) *b;
+    int32_t d = (int32_t) *a - (int32_t) *b;
+    a += 1; b += 1;
+    s = s > 127 ? 127 : s;
+    s = s < -128 ? -128 : s;
+    d = d > 127 ? 127 : d;
+    d = d < -128 ? -128 : d;
+    *ya = (uint8_t) (s + 128); ya += 1;
+    *ys = (uint8_t) (d + 128); ys += 1;
+  }
+}

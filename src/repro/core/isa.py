@@ -34,7 +34,8 @@ __all__ = [
     "vbsl", "vmla", "vmls", "vfma", "vget_high", "vget_low", "vcombine",
     "vext", "vrev64", "vrbit", "vdup", "vpadd", "vaddv", "vmaxv", "vminv",
     "vrecpe", "vrecps", "vrsqrte", "vrsqrts", "vcvt", "vzip", "vtbl",
-    "vld1", "vst1",
+    "vld1", "vst1", "vld1m", "vst1m", "vtile", "vqadd", "vqsub",
+    "vreinterpret",
 ]
 
 
@@ -518,6 +519,12 @@ def _vld1_scalar_cost(buf, offset, lanes, *_, **__):
 @register("vld1", "vector", cost=_vld1_cost, width=_vld1_width,
           doc="unit-stride whole-register load (vle<eew>.v)")
 def _vld1_v(buf, offset, lanes):
+    if lanes > buf.shape[0]:
+        # register wider than the whole buffer: only reachable from a
+        # never-executed (zero-trip) loop body, but tracing still needs
+        # a shape-valid load — clamped gather keeps it in bounds
+        idx = jnp.clip(offset + jnp.arange(lanes), 0, buf.shape[0] - 1)
+        return buf[idx]
     return jax.lax.dynamic_slice_in_dim(buf, offset, lanes, axis=0)
 
 
@@ -550,6 +557,10 @@ def _vst1_scalar_cost(buf, offset, val, *_, **__):
 @register("vst1", "vector", cost=_vst1_cost, width=_vst1_width,
           doc="unit-stride whole-register store (vse<eew>.v)")
 def _vst1_v(buf, offset, val):
+    if val.shape[0] > buf.shape[0]:
+        # see _vld1_v: trace-safety for zero-trip widened strip bodies
+        return buf.at[offset + jnp.arange(val.shape[0])].set(
+            val, mode="drop")
     return jax.lax.dynamic_update_slice_in_dim(buf, val, offset, axis=0)
 
 
@@ -565,6 +576,183 @@ def vst1(buf, offset, val):
     """Store register ``val`` into ``buf`` at element ``offset``;
     returns the updated buffer (functional-store semantics)."""
     return dispatch("vst1", buf, offset, val)
+
+
+# -- masked (predicated) memory ops ------------------------------------------
+#
+# The RVV tail story: instead of a scalar cleanup loop, one more strip
+# iteration runs with the active length set below the register width
+# (``vsetvli`` semantics).  ``vld1m``/``vst1m`` are the logical-ISA form:
+# the first ``cnt`` lanes are live; masked-off load lanes read as zero
+# and masked-off store lanes leave memory untouched.  One predicated
+# whole-register instruction either way, which is what the cost models
+# charge — predication is architecturally free on RVV.
+
+def _vld1m_width(buf, offset, lanes, cnt, fill=0, *_, **__):
+    return int(lanes) * jnp.dtype(buf.dtype).itemsize * 8
+
+
+def _vld1m_cost(buf, offset, lanes, cnt, fill=0, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(lanes), buf.dtype)
+
+
+@register("vld1m", "vector", cost=_vld1m_cost, width=_vld1m_width,
+          doc="predicated unit-stride load (vsetvli cnt; vle<eew>.v)")
+def _vld1m_v(buf, offset, lanes, cnt, fill=0):
+    lane = jnp.arange(lanes)
+    idx = jnp.clip(offset + lane, 0, buf.shape[0] - 1)
+    return jnp.where(lane < cnt, buf[idx], jnp.asarray(fill, buf.dtype))
+
+
+@register("vld1m", "generic", cost=lambda buf, offset, lanes, cnt,
+          fill=0, *_, **__: int(lanes),
+          doc="per-lane guarded scalar load loop")
+def _vld1m_g(buf, offset, lanes, cnt, fill=0):
+    def one(i):
+        safe = jnp.clip(offset + i, 0, buf.shape[0] - 1)
+        v = jax.lax.dynamic_index_in_dim(buf, safe, axis=0, keepdims=False)
+        return jnp.where(i < cnt, v, jnp.asarray(fill, buf.dtype))
+    return jax.vmap(one)(jnp.arange(lanes))
+
+
+def vld1m(buf, offset, lanes, cnt, fill=0):
+    """Load ``lanes`` elements at ``offset`` with only the first ``cnt``
+    active; inactive lanes read as ``fill`` (never out of bounds)."""
+    return dispatch("vld1m", buf, offset, lanes, cnt, fill)
+
+
+def _vst1m_width(buf, offset, val, cnt, *_, **__):
+    return int(np.prod(val.shape) or 1) * jnp.dtype(val.dtype).itemsize * 8
+
+
+def _vst1m_cost(buf, offset, val, cnt, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(np.prod(val.shape) or 1), val.dtype)
+
+
+@register("vst1m", "vector", cost=_vst1m_cost, width=_vst1m_width,
+          doc="predicated unit-stride store (vsetvli cnt; vse<eew>.v)")
+@register("vst1m", "generic", cost=lambda buf, offset, val, cnt,
+          *_, **__: int(np.prod(val.shape) or 1),
+          doc="per-lane guarded scalar store loop")
+def _vst1m(buf, offset, val, cnt):
+    lane = jnp.arange(val.shape[0])
+    # masked-off lanes target index == len(buf): dropped by scatter mode
+    idx = jnp.where(lane < cnt, offset + lane, buf.shape[0])
+    return buf.at[idx].set(val, mode="drop")
+
+
+def vst1m(buf, offset, val, cnt):
+    """Store the first ``cnt`` lanes of ``val`` into ``buf`` at
+    ``offset``; returns the updated buffer."""
+    return dispatch("vst1m", buf, offset, val, cnt)
+
+
+# -- vtile: loop-invariant register widening ---------------------------------
+#
+# When the re-vectorizer widens a strip by ``reps``, loop-invariant
+# registers set up before the loop (vdup'd constants, per-channel
+# vld1'd scale/bias) must repeat their lane pattern across the widened
+# register.  On RVV this is a register-group move/slide sequence.
+
+def _vtile_width(a, reps, *_, **__):
+    return int(np.prod(a.shape) or 1) * int(reps) * \
+        jnp.dtype(a.dtype).itemsize * 8
+
+
+def _vtile_cost(a, reps, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(np.prod(a.shape) or 1) * int(reps), a.dtype)
+
+
+@register("vtile", "vector", cost=_vtile_cost, width=_vtile_width,
+          doc="repeat lane pattern across a widened register group")
+@register("vtile", "generic", cost=lambda a, reps, *_, **__:
+          int(np.prod(a.shape) or 1) * int(reps))
+def _vtile(a, reps):
+    return jnp.tile(a, int(reps))
+
+
+def vtile(a, reps):
+    """Repeat register ``a``'s lanes ``reps`` times (widened register)."""
+    return dispatch("vtile", a, reps)
+
+
+# -- saturating arithmetic (vqadd/vqsub) -------------------------------------
+
+def _sat_math(x, y, sub: bool):
+    """Branchless saturating add/sub — no widening, so it is exact for
+    every integer lane width without x64 mode."""
+    dt = x.dtype
+    if not jnp.issubdtype(dt, jnp.integer):
+        return (x - y if sub else x + y).astype(dt)
+    info = jnp.iinfo(dt)
+    s = (x - y) if sub else (x + y)           # wraps on overflow
+    if jnp.issubdtype(dt, jnp.unsignedinteger):
+        if sub:
+            return jnp.where(y > x, jnp.zeros((), dt), s)
+        return jnp.where(s < x, jnp.full((), info.max, dt), s)
+    # signed: overflow iff operand signs admit it and result sign flipped
+    ovf = ((x ^ y) & (x ^ s) if sub else (x ^ s) & (y ^ s)) < 0
+    sat = jnp.where(x < 0, jnp.full((), info.min, dt),
+                    jnp.full((), info.max, dt))
+    return jnp.where(ovf, sat, s)
+
+
+def _saturate(op_name, sub):
+    @register(op_name, "generic", cost=scalar_cost(3),
+              doc="per-element overflow-check loop")
+    def _g(a, b):
+        f = jax.vmap(lambda x, y: _sat_math(x, y, sub))
+        return f(jnp.ravel(a),
+                 jnp.ravel(jnp.broadcast_to(b, jnp.shape(a)))
+                 ).reshape(jnp.shape(a))
+
+    # RVV has native saturating adds (vsadd/vssub): one instruction.
+    @register(op_name, "vector", cost=vector_cost(1),
+              doc="native saturating op (vsadd/vssub)")
+    def _v(a, b):
+        return _sat_math(a, b, sub)
+
+    def api(a, b):
+        return dispatch(op_name, a, b)
+
+    api.__name__ = op_name
+    return api
+
+
+vqadd = _saturate("vqadd", sub=False)
+vqsub = _saturate("vqsub", sub=True)
+
+
+# -- vreinterpret: register bit reinterpretation -----------------------------
+#
+# A pure type-level cast on the register file (free on RVV — the vector
+# register has no element type); the logical form reshapes lanes so the
+# total bit pattern is preserved (little-endian, matching NEON).
+
+@register("vreinterpret", "vector", cost=lambda *a, **k: 0,
+          doc="register reinterpret (free: no data movement)")
+@register("vreinterpret", "generic", cost=scalar_cost(1))
+def _vreinterpret(a, dtype):
+    src, dst = jnp.dtype(a.dtype), jnp.dtype(dtype)
+    if src == dst:
+        return a
+    if src.itemsize == dst.itemsize:
+        return jax.lax.bitcast_convert_type(a, dst)
+    total = a.shape[-1] * src.itemsize
+    out_lanes = total // dst.itemsize
+    if src.itemsize < dst.itemsize:
+        g = dst.itemsize // src.itemsize
+        x = a.reshape(a.shape[:-1] + (out_lanes, g))
+        return jax.lax.bitcast_convert_type(x, dst)
+    x = jax.lax.bitcast_convert_type(a, dst)    # adds a trailing group dim
+    return x.reshape(a.shape[:-1] + (out_lanes,))
+
+
+def vreinterpret(a, dtype):
+    return dispatch("vreinterpret", a, dtype)
 
 
 @register("vtbl", "generic", cost=scalar_cost(2), doc="per-lane table lookup")

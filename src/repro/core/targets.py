@@ -100,6 +100,27 @@ class Target:
         per = math.ceil(max(1, n_elems) / self.vreg_elems(dtype))
         return per * (self.lmul if self.vla else 1)
 
+    @property
+    def effective_vlen(self) -> int:
+        """Usable register-group width in bits: VLEN x LMUL on the VLA
+        family (0 on fixed-tile machines, whose per-dtype capacity is
+        :meth:`vreg_elems`).  This is the width the re-vectorizer
+        (repro.port.revec) re-tiles NEON-granularity strips to, and
+        what the migration report's revec rows record."""
+        return self.lmul * self.vlen if self.vla else 0
+
+    def retile_factor(self, lanes: int, dtype) -> int:
+        """How many ``lanes``-wide logical registers of ``dtype`` one
+        register group holds — the widening factor the re-vectorizer
+        applies to a fixed-width strip (1 = no headroom; a 4-lane f32
+        NEON register on rvv-1024 re-tiles 8x).  Fixed-tile machines
+        are never strip-re-tiled (consistent with
+        :attr:`effective_vlen` = 0): kernels are *compiled* for them at
+        tensor granularity instead."""
+        if not self.vla:
+            return 1
+        return max(1, self.vreg_elems(dtype) // max(1, lanes))
+
     def supports_width(self, bits: int) -> bool:
         """The paper's substitution rule: a fixed-width logical register
         maps onto this target iff the vector register group can hold it

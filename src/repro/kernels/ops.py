@@ -73,8 +73,9 @@ def _gemm_pallas(a, b, bias=None, clamp_min=float("-inf"),
 
 
 def gemm(a, b, bias=None, clamp_min=float("-inf"), clamp_max=float("inf"),
-         *, policy=None):
-    return dispatch("gemm", a, b, bias, clamp_min, clamp_max, policy=policy)
+         *, policy=None, target=None):
+    return dispatch("gemm", a, b, bias, clamp_min, clamp_max, policy=policy,
+                    target=target)
 
 
 # ---------------------------------------------------------------------------
@@ -300,10 +301,15 @@ def _attn_pallas(q, k, v, causal=True, window=None, softcap=None, scale=None):
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
-              policy=None):
-    """q:(B,Sq,H,D) k,v:(B,Sk,Hkv,D) -> (B,Sq,H,D)."""
+              policy=None, target=None):
+    """q:(B,Sq,H,D) k,v:(B,Sk,Hkv,D) -> (B,Sq,H,D).
+
+    ``target`` selects the lowering against an explicit machine model
+    (multi-backend serving mixes targets per request); None uses the
+    ambient thread-scoped target.
+    """
     return dispatch("attention", q, k, v, causal, window, softcap, scale,
-                    policy=policy)
+                    policy=policy, target=target)
 
 
 def _dec_attn_vector(q, k, v, lengths, window=None, softcap=None, scale=None):
@@ -350,10 +356,10 @@ def _dec_attn_pallas(q, k, v, lengths, window=None, softcap=None, scale=None):
 
 
 def decode_attention(q, k, v, lengths, *, window=None, softcap=None,
-                     scale=None, policy=None):
+                     scale=None, policy=None, target=None):
     """q:(B,1,H,D) k,v:(B,S,Hkv,D) lengths:(B,) -> (B,1,H,D)."""
     return dispatch("decode_attention", q, k, v, lengths, window, softcap,
-                    scale, policy=policy)
+                    scale, policy=policy, target=target)
 
 
 # ---------------------------------------------------------------------------
@@ -376,8 +382,8 @@ def _ssd_pallas(x, dt, A, B, C, D=None, *, chunk=128):
     return _ssd.ssd(x, dt, A, B, C, D, chunk=chunk, interpret=_interp())
 
 
-def ssd(x, dt, A, B, C, D=None, *, chunk=128, policy=None):
-    return dispatch("ssd", x, dt, A, B, C, D, policy=policy)
+def ssd(x, dt, A, B, C, D=None, *, chunk=128, policy=None, target=None):
+    return dispatch("ssd", x, dt, A, B, C, D, policy=policy, target=target)
 
 
 # default policy: customized kernels on TPU, vector tier elsewhere (the

@@ -49,8 +49,10 @@ def gqa_cache_init(cfg, batch, s_max, window=None, dtype=None):
 
 
 def gqa_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
-              window=None, memory=None, causal=True):
-    """x:(B,S,d).  mode in train|prefill|decode.  memory: cross-attn kv."""
+              window=None, memory=None, causal=True, target=None):
+    """x:(B,S,d).  mode in train|prefill|decode.  memory: cross-attn kv.
+    ``target`` pins the attention lowering selection to an explicit
+    machine model (per-request multi-backend serving)."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = L.linear(params["wq"], x).reshape(b, s, h, hd)
@@ -68,12 +70,13 @@ def gqa_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
         k = L.rope_apply(k, positions, cfg.rope_theta)
 
     if memory is not None:
-        out = ops.attention(q, k, v, causal=False, softcap=cfg.softcap)
+        out = ops.attention(q, k, v, causal=False, softcap=cfg.softcap,
+                            target=target)
         return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
 
     if mode == "train":
         out = ops.attention(q, k, v, causal=causal, window=window,
-                            softcap=cfg.softcap)
+                            softcap=cfg.softcap, target=target)
         return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
 
     if mode == "prefill":
@@ -89,7 +92,7 @@ def gqa_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
             cache = {"k": cache["k"].at[:, :s].set(k),
                      "v": cache["v"].at[:, :s].set(v)}
         out = ops.attention(q, k, v, causal=True, window=window,
-                            softcap=cfg.softcap)
+                            softcap=cfg.softcap, target=target)
         return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
 
     # decode: s == 1, write at pos = lengths (per row), attend valid prefix
@@ -100,7 +103,7 @@ def gqa_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
              "v": cache["v"].at[bidx, slot].set(v[:, 0])}
     valid = jnp.minimum(lengths + 1, slots)
     out = ops.decode_attention(q, cache["k"], cache["v"], valid,
-                               softcap=cfg.softcap)
+                               softcap=cfg.softcap, target=target)
     return L.linear_rp(params["wo"], out.reshape(b, s, h * hd), cfg), cache
 
 
@@ -162,7 +165,7 @@ def _mla_ckv(params, x, cfg, positions):
 
 
 def mla_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
-              **_):
+              target=None, **_):
     b, s, _ = x.shape
     h = cfg.n_heads
     r, nd, vd = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
@@ -177,7 +180,8 @@ def mla_apply(params, x, cfg, *, positions, mode, cache=None, lengths=None,
         k = jnp.concatenate([k_nope,
                              jnp.broadcast_to(k_rope[:, :, None, :],
                                               (b, s, h, r))], -1)
-        out = ops.attention(q, k, v, causal=True, scale=scale)
+        out = ops.attention(q, k, v, causal=True, scale=scale,
+                            target=target)
         if mode == "prefill":
             cache = {"c_kv": cache["c_kv"].at[:, :s].set(c_kv),
                      "k_rope": cache["k_rope"].at[:, :s].set(k_rope)}

@@ -27,6 +27,8 @@ class Ctx:
     memory: Any = None             # encoder (k, v) memory for cross attn
     emb0: Any = None               # zamba2: initial embedding stream
     shared: Any = None             # zamba2: shared block params
+    target: Any = None             # explicit lowering target (per-request
+                                   # multi-backend serving); None = ambient
 
 
 def _attn_impl(cfg):
@@ -70,7 +72,7 @@ def _tblock_apply(params, x, cache, ctx: Ctx, *, ffn: str, window=None):
     h = L.norm_apply(params["ln1"], x, cfg.norm)
     h, cache = apply(params["attn"], h, cfg, positions=ctx.positions,
                      mode=ctx.mode, cache=cache, lengths=ctx.lengths,
-                     window=window)
+                     window=window, target=ctx.target)
     if cfg.sandwich_norm:
         h = L.norm_apply(params["ln1p"], h, cfg.norm)
     x = x + h
@@ -97,7 +99,7 @@ def _mamba_init(key, cfg):
 def _mamba_apply(params, x, cache, ctx: Ctx):
     h = L.norm_apply(params["ln"], x, ctx.cfg.norm)
     h, cache = S.mamba_apply(params["mamba"], h, ctx.cfg, mode=ctx.mode,
-                             cache=cache)
+                             cache=cache, target=ctx.target)
     return x + h, cache, jnp.zeros((), jnp.float32)
 
 
@@ -119,7 +121,8 @@ def _shared_apply(shared, x, cache, ctx: Ctx):
     cat = jnp.concatenate([x, ctx.emb0], axis=-1)
     h = L.norm_apply(shared["ln1"], cat, cfg.norm)
     h, cache = A.gqa_apply(shared["attn"], h, cfg, positions=ctx.positions,
-                           mode=ctx.mode, cache=cache, lengths=ctx.lengths)
+                           mode=ctx.mode, cache=cache, lengths=ctx.lengths,
+                           target=ctx.target)
     x = x + h
     m = L.mlp_apply(shared["mlp"],
                     L.norm_apply(shared["ln2"], cat, cfg.norm), cfg)
@@ -152,7 +155,7 @@ def _enc_apply(params, x, cache, ctx: Ctx):
     cfg = ctx.cfg
     h = L.norm_apply(params["ln1"], x, cfg.norm)
     h, _ = A.gqa_apply(params["attn"], h, cfg, positions=ctx.positions,
-                       mode="train", causal=False)
+                       mode="train", causal=False, target=ctx.target)
     x = x + h
     h = L.norm_apply(params["ln2"], x, cfg.norm)
     return x + L.mlp_apply(params["mlp"], h, cfg), cache, \
@@ -184,7 +187,7 @@ def _dec_apply(params, x, cache, ctx: Ctx):
     h, self_cache = A.gqa_apply(params["attn"], h, cfg,
                                 positions=ctx.positions, mode=ctx.mode,
                                 cache=None if cache is None else cache["self"],
-                                lengths=ctx.lengths)
+                                lengths=ctx.lengths, target=ctx.target)
     x = x + h
     # cross attention over encoder memory
     h = L.norm_apply(params["lnx"], x, cfg.norm)
@@ -198,7 +201,7 @@ def _dec_apply(params, x, cache, ctx: Ctx):
         xv = L.linear(params["xattn"]["wv"], mem).reshape(
             b, f, cfg.n_kv_heads, cfg.head_dim)
     h, _ = A.gqa_apply(params["xattn"], h, cfg, positions=ctx.positions,
-                       mode="train", memory=(xk, xv))
+                       mode="train", memory=(xk, xv), target=ctx.target)
     x = x + h
     h = L.norm_apply(params["ln2"], x, cfg.norm)
     x = x + L.mlp_apply(params["mlp"], h, cfg)

@@ -76,13 +76,13 @@ def _embed_inputs(params, cfg, batch, mode, lengths):
     return x, positions
 
 
-def _encode(params, cfg, frames):
+def _encode(params, cfg, frames, target=None):
     """Whisper encoder over stub frame embeddings (B, F, d)."""
     x = frames.astype(L.dtype_of(cfg))
     pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
     x = (x.astype(jnp.float32) +
          L.sinusoidal_positions(pos, cfg.d_model)).astype(x.dtype)
-    ctx = B.Ctx(cfg=cfg, mode="train", positions=pos)
+    ctx = B.Ctx(cfg=cfg, mode="train", positions=pos, target=target)
 
     def body(carry, p):
         y, _, _ = B.block_apply("enc", p, carry, None, ctx)
@@ -94,16 +94,23 @@ def _encode(params, cfg, frames):
 
 
 def forward(params, cfg, batch, *, mode: str, cache=None,
-            lengths: Optional[jnp.ndarray] = None, sp_spec=None):
-    """Returns (logits, new_cache, aux_loss)."""
+            lengths: Optional[jnp.ndarray] = None, sp_spec=None,
+            target=None):
+    """Returns (logits, new_cache, aux_loss).
+
+    ``target`` pins every attention/ssd lowering selection in this
+    forward to an explicit machine model, so a multi-backend server can
+    mix targets per request instead of relying on the ambient
+    thread-scoped target.
+    """
     prefix, unit, reps, rem = cfg.pattern_unit()
     x, positions = _embed_inputs(params, cfg, batch, mode, lengths)
     memory = None
     if cfg.family == "encdec" and mode != "decode":
-        memory = _encode(params, cfg, batch["frames"])
+        memory = _encode(params, cfg, batch["frames"], target=target)
     ctx = B.Ctx(cfg=cfg, mode=mode, positions=positions, lengths=lengths,
                 memory=memory, emb0=x if cfg.shared_attn_every else None,
-                shared=params.get("shared"))
+                shared=params.get("shared"), target=target)
     aux = jnp.zeros((), jnp.float32)
     new_cache = {"prefix": [], "unit": [], "rem": []}
 

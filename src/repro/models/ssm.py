@@ -69,8 +69,9 @@ def _causal_conv(xbc, w, b, history=None):
     return out.astype(xbc.dtype), new_hist
 
 
-def mamba_apply(params, x, cfg, *, mode, cache=None, **_):
-    """x:(B, S, d) -> (y, cache)."""
+def mamba_apply(params, x, cfg, *, mode, cache=None, target=None, **_):
+    """x:(B, S, d) -> (y, cache).  ``target`` pins the ssd lowering
+    selection to an explicit machine model (per-request serving)."""
     bsz, s, d = x.shape
     di, g, n, h, p = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
                       cfg.ssm_heads, cfg.ssm_headdim)
@@ -109,7 +110,7 @@ def mamba_apply(params, x, cfg, *, mode, cache=None, **_):
         B = xbc_conv[..., di:di + g * n].reshape(bsz, s, g, n)
         C = xbc_conv[..., di + g * n:].reshape(bsz, s, g, n)
         y = ops.ssd(xs, dt.astype(jnp.float32), A, B, C, params["D"],
-                    chunk=cfg.ssm_chunk)
+                    chunk=cfg.ssm_chunk, target=target)
         y = y.reshape(bsz, s, di)
         if mode == "prefill":
             # closed-form final state for the decode cache:

@@ -23,20 +23,23 @@ from __future__ import annotations
 import os
 from typing import Dict, Optional
 
-from . import cparse, intrinsics, interp, ir, lower
+from . import cparse, intrinsics, interp, ir, lower, revec
 from .cparse import ParseError, parse
+from .compile import CompileError, compile_fn
 from .interp import ExecError, Machine
 from .intrinsics import UnknownIntrinsic, resolve
 from .ir import TFunction
 from .lower import LowerError, lower_function
 from .report import PORT_SWEEP, format_report
 from .report import report as _report
+from .revec import RetileResult, retile
 
 __all__ = [
-    "PortedKernel", "compile_kernel", "compile_file", "load_corpus",
-    "report", "format_report", "PORT_SWEEP",
-    "parse", "lower_function", "resolve",
+    "PortedKernel", "CompiledKernel", "compile_kernel", "compile_file",
+    "load_corpus", "report", "format_report", "PORT_SWEEP",
+    "parse", "lower_function", "resolve", "retile", "compile_fn",
     "ParseError", "LowerError", "ExecError", "UnknownIntrinsic",
+    "CompileError", "RetileResult",
 ]
 
 
@@ -72,6 +75,35 @@ class PortedKernel:
         return Machine(self.fn, policy=policy, target=target,
                        abstract=True).run(*args)
 
+    # -- the JIT backend ---------------------------------------------------
+    def retile(self, target) -> RetileResult:
+        """Re-tile this kernel's strip loops at ``target``'s effective
+        register width (VLEN x LMUL) — see :mod:`repro.port.revec`."""
+        return retile(self.fn, target)
+
+    def compile(self, *, target=None, policy: Optional[str] = "pallas",
+                revec: bool = False, jit: bool = True) -> "CompiledKernel":
+        """Compile to a single jitted JAX function (one XLA executable
+        instead of one Python dispatch per strip iteration).
+
+        With ``revec=True`` the IR is first re-tiled at ``target``'s
+        VLEN x LMUL, so a 128-bit NEON strip runs at the full register
+        group width with a predicated tail.  ``target=None`` resolves to
+        the ambient thread-scoped target *now* — the lowering selections
+        are burned into the trace, so the resolved machine is pinned
+        into the executable (and the cache key), not re-read per call.
+        Compiled kernels are cached per (target, policy, revec).
+        """
+        from repro.core import targets as _targets
+        tgt = (_targets.get_target(target) if target is not None
+               else _targets.current_target())
+        key = (tgt.name, policy, bool(revec), bool(jit))
+        cache = self.__dict__.setdefault("_compiled", {})
+        if key not in cache:
+            cache[key] = CompiledKernel(self, target=tgt, policy=policy,
+                                        revec=revec, jit=jit)
+        return cache[key]
+
     def substitution(self, target) -> Dict[str, bool]:
         """Table 2 for this kernel: per intrinsic, does its fixed-width
         register map natively onto ``target`` (``vlen >= width``)?"""
@@ -87,6 +119,55 @@ class PortedKernel:
     def __repr__(self):
         return (f"PortedKernel({self.name!r}, params="
                 f"{self.param_names}, writes={self.fn.writes})")
+
+
+class CompiledKernel:
+    """A ported kernel lowered to one jitted JAX function.
+
+    ``revec=True`` re-tiles the strip loops at the target's effective
+    width first; ``retiling`` then reports what the re-vectorizer did
+    (factor, masked tails, per-loop notes).  Calling convention matches
+    :class:`PortedKernel`.
+    """
+
+    def __init__(self, kernel: PortedKernel, *, target=None,
+                 policy: Optional[str] = "pallas", revec: bool = False,
+                 jit: bool = True):
+        from repro.core import targets as _targets
+        self.source_kernel = kernel
+        self.target = (_targets.get_target(target) if target is not None
+                       else _targets.current_target())
+        self.policy = policy
+        self.revec = revec
+        self.retiling: Optional[RetileResult] = None
+        fn = kernel.fn
+        if revec:
+            self.retiling = retile(fn, self.target)
+            fn = self.retiling.fn
+        self.fn = fn
+        self._call = compile_fn(fn, policy=policy, target=self.target,
+                                jit=jit)
+
+    @property
+    def name(self) -> str:
+        return self.fn.name
+
+    def __call__(self, *args):
+        return self._call(*args)
+
+    def estimate(self, *args) -> Dict:
+        """Abstract dynamic-instruction estimate of the (possibly
+        re-tiled) IR this compiled kernel executes."""
+        return Machine(self.fn, policy=self.policy, target=self.target,
+                       abstract=True).run(*args)
+
+    def __repr__(self):
+        rv = ""
+        if self.retiling is not None:
+            rv = (f", revec={self.retiling.factor}x"
+                  f"/{self.retiling.retiled} strips")
+        return (f"CompiledKernel({self.name!r}, "
+                f"target={self.target.name}{rv})")
 
 
 def compile_kernel(source: str, name: Optional[str] = None) -> PortedKernel:

@@ -156,6 +156,7 @@ class Num:
 class Call:
     name: str
     args: List[object]
+    line: int = 0                # source line (for diagnostics)
 
 
 @dataclasses.dataclass
@@ -466,6 +467,7 @@ class _Parser:
                 self.expect("punct", "]")
                 e = Index(base=e, index=idx)
             elif self.at("punct", "(") and isinstance(e, Name):
+                call_line = self.peek().line
                 self.next()
                 args = []
                 if not self.at("punct", ")"):
@@ -474,7 +476,7 @@ class _Parser:
                         if not self.accept("punct", ","):
                             break
                 self.expect("punct", ")")
-                e = Call(name=e.id, args=args)
+                e = Call(name=e.id, args=args, line=call_line)
             else:
                 return e
 

@@ -38,8 +38,38 @@ __all__ = ["Machine", "ExecError"]
 _MAX_ITERS = 10_000_000     # runaway-loop guard for malformed kernels
 
 # abstract-mode stand-in for scalars produced by vector ops (vaddv,
-# get_lane): consuming one in control flow is a subset violation anyway
-_UNKNOWN_SCALAR = float("nan")
+# get_lane): consuming one in control flow is a subset violation anyway.
+# The sentinel is a NaN *subclass* carrying the producing intrinsic and
+# source line, so the ExecError raised when one reaches control flow can
+# name the culprit instead of reporting an anonymous NaN.
+class _UnknownScalar(float):
+    __slots__ = ("origin",)
+
+    def __new__(cls, origin=None):
+        self = super().__new__(cls, float("nan"))
+        self.origin = origin          # (intrinsic name, source line) | None
+        return self
+
+
+_UNKNOWN_SCALAR = _UnknownScalar()
+
+
+def _unknown_like(*operands) -> "_UnknownScalar":
+    """Propagate an unknown scalar, keeping the first operand's origin."""
+    for x in operands:
+        o = getattr(x, "origin", None)
+        if o is not None:
+            return _UnknownScalar(o)
+    return _UNKNOWN_SCALAR
+
+
+def _unknown_source(x) -> str:
+    o = getattr(x, "origin", None)
+    if o is None:
+        return "a vector-produced scalar"
+    name, line = o
+    at = f" (line {line})" if line else ""
+    return f"a scalar produced by vector intrinsic {name!r}{at}"
 
 
 class ExecError(RuntimeError):
@@ -132,9 +162,9 @@ class Machine:
             self.block(ins.cond, env)
             cond = env[ins.cond_value]
             if isinstance(cond, float) and math.isnan(cond):
-                raise ExecError("loop condition depends on a vector-"
-                                "produced scalar (abstract mode cannot "
-                                "trace data-dependent trip counts)")
+                raise ExecError(f"loop condition depends on "
+                                f"{_unknown_source(cond)} (abstract mode "
+                                f"cannot trace data-dependent trip counts)")
             if not cond:
                 break
             self.block(ins.body, env)
@@ -147,9 +177,9 @@ class Machine:
     def if_op(self, ins: IfOp, env):
         cond = env[ins.cond_value]
         if _is_nan(cond):
-            raise ExecError("branch condition depends on a vector-"
-                            "produced scalar (abstract mode cannot trace "
-                            "data-dependent control flow)")
+            raise ExecError(f"branch condition depends on "
+                            f"{_unknown_source(cond)} (abstract mode "
+                            f"cannot trace data-dependent control flow)")
         if cond:
             self.block(ins.then, env)
             vals = [env[y] for y in ins.then_yields]
@@ -169,37 +199,39 @@ class Machine:
             # the unknown-scalar sentinel must survive every scalar op
             # (an int() coercion would crash or, worse, collapse it to a
             # concrete value and silently corrupt abstract estimates)
-            env[ins.result] = (_UNKNOWN_SCALAR if _is_nan(a) or _is_nan(b)
+            env[ins.result] = (_unknown_like(a, b)
+                               if _is_nan(a) or _is_nan(b)
                                else _sbin(ins.attrs["op"], a, b))
         elif op == "scmp":
             self.scalar_instrs += 1
             a, b = env[ins.args[0]], env[ins.args[1]]
-            env[ins.result] = (_UNKNOWN_SCALAR if _is_nan(a) or _is_nan(b)
+            env[ins.result] = (_unknown_like(a, b)
+                               if _is_nan(a) or _is_nan(b)
                                else _scmp(ins.attrs["op"], a, b))
         elif op == "sneg":
             env[ins.result] = -env[ins.args[0]]
         elif op == "snot":
             v = env[ins.args[0]]
-            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else not v
+            env[ins.result] = _unknown_like(v) if _is_nan(v) else not v
         elif op == "sinv":
             v = env[ins.args[0]]
-            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else ~int(v)
+            env[ins.result] = _unknown_like(v) if _is_nan(v) else ~int(v)
         elif op == "sselect":
             c, a, b = (env[v] for v in ins.args)
-            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(c) else \
+            env[ins.result] = _unknown_like(c) if _is_nan(c) else \
                 (a if c else b)
         elif op == "scast":
             v = env[ins.args[0]]
-            env[ins.result] = _UNKNOWN_SCALAR if _is_nan(v) else \
+            env[ins.result] = _unknown_like(v) if _is_nan(v) else \
                 _scast(v, ins.result.type.dtype)
         elif op == "ptradd":
             buf, off = env[ins.args[0]]
             delta = env[ins.args[1]]
             if _is_nan(delta):
                 raise ExecError(
-                    "pointer displacement depends on a vector-produced "
-                    "scalar (abstract mode cannot trace data-dependent "
-                    "addressing)")
+                    f"pointer displacement depends on "
+                    f"{_unknown_source(delta)} (abstract mode cannot "
+                    f"trace data-dependent addressing)")
             env[ins.result] = (buf, off + int(delta))
         elif op == "ptrcast":
             env[ins.result] = env[ins.args[0]]
@@ -236,7 +268,8 @@ class Machine:
             # register -> scalar move: executor-native, one scalar op
             self.scalar_instrs += 1
             if self.abstract:
-                env[ins.result] = _UNKNOWN_SCALAR
+                env[ins.result] = _UnknownScalar(
+                    (name, ins.attrs.get("_line", 0)))
             else:
                 vec, lane = env[ins.args[0]], int(env[ins.args[1]])
                 env[ins.result] = np.asarray(vec[lane]).item()
@@ -263,11 +296,27 @@ class Machine:
                     np.asarray(self.memory[buf][off]).item())
             self.scalar_instrs += 1          # the one-lane load
             args = [x, (rty.lanes,)]
+        elif kind == "load_masked":
+            buf, off = env[ins.args[0]]
+            cnt = env[ins.args[1]]
+            args = [self.memory[buf], _as_np_index(off), rty.lanes,
+                    _as_np_index(cnt), ins.attrs.get("fill", 0)]
         elif kind == "store":
             buf, off = env[ins.args[0]]
             val = (abstract_reg(ins.args[1].type) if self.abstract
                    else env[ins.args[1]])
             args = [self.memory[buf], _as_np_index(off), val]
+        elif kind == "store_masked":
+            buf, off = env[ins.args[0]]
+            val = (abstract_reg(ins.args[1].type) if self.abstract
+                   else env[ins.args[1]])
+            cnt = env[ins.args[2]]
+            args = [self.memory[buf], _as_np_index(off), val,
+                    _as_np_index(cnt)]
+        elif kind == "tile":
+            vec = (abstract_reg(ins.args[0].type) if self.abstract
+                   else env[ins.args[0]])
+            args = [vec, ins.attrs["reps"]]
         elif kind == "shift":
             vec = (abstract_reg(ins.args[0].type) if self.abstract
                    else env[ins.args[0]])
@@ -281,7 +330,7 @@ class Machine:
         elif kind == "reduce":
             args = [abstract_reg(ins.args[0].type) if self.abstract
                     else env[ins.args[0]]]
-        elif kind == "cvt":
+        elif kind in ("cvt", "reinterpret"):
             vec = (abstract_reg(ins.args[0].type) if self.abstract
                    else env[ins.args[0]])
             args = [vec, jnp.dtype(rty.dtype)]
@@ -290,16 +339,17 @@ class Machine:
 
         if self.abstract:
             self._charge(name, isa_op, width, *args)
-            if kind == "store":
+            if kind in ("store", "store_masked"):
                 return
             if kind == "reduce":
-                env[ins.result] = _UNKNOWN_SCALAR
+                env[ins.result] = _UnknownScalar(
+                    (name, ins.attrs.get("_line", 0)))
             else:
                 env[ins.result] = abstract_reg(rty)
             return
 
         out = self._dispatch(isa_op, *args)
-        if kind == "store":
+        if kind in ("store", "store_masked"):
             buf, _ = env[ins.args[0]]
             self.memory[buf] = out
         elif kind == "reduce":

@@ -12,8 +12,9 @@ emits a logical-ISA call and the cost-driven selector
 
 The name grammar handled::
 
-    v<base>[q]_<elem>             vaddq_f32, vpadd_f32, vceq_u8 ...
+    v<base>[q]_<elem>             vaddq_f32, vqaddq_s8, vceq_u8 ...
     v<base>[q]_n_<elem>           vdupq_n_f32, vshrq_n_s32 ...
+    vreinterpret[q]_<to>_<from>   register bit reinterpretation
     vld1[q]_<elem>                unit-stride load
     vld1[q]_dup_<elem>            load-one + broadcast
     vst1[q]_<elem>                unit-stride store
@@ -60,7 +61,8 @@ _UNARY = {"abs": "vabs", "neg": "vneg", "recpe": "vrecpe",
           "rsqrte": "vrsqrte", "rev64": "vrev64", "rbit": "vrbit"}
 _BINARY = {"add": "vadd", "sub": "vsub", "mul": "vmul", "max": "vmax",
            "min": "vmin", "and": "vand", "orr": "vorr", "eor": "veor",
-           "recps": "vrecps", "rsqrts": "vrsqrts", "padd": "vpadd"}
+           "recps": "vrecps", "rsqrts": "vrsqrts", "padd": "vpadd",
+           "qadd": "vqadd", "qsub": "vqsub"}
 _TERNARY = {"mla": "vmla", "mls": "vmls", "fma": "vfma"}
 _CMP = {"ceq": "vceq", "cgt": "vcgt", "cge": "vcge",
         "clt": "vclt", "cle": "vcle"}
@@ -147,6 +149,18 @@ def _resolve(name: str) -> Optional[IntrinSpec]:  # noqa: C901
         dt = _ELEM[m.group(2)]
         v = _vt(dt, m.group(1) == "q")
         return IntrinSpec(name, "vext", "ext", (v, v, "imm"), v, v.bits)
+
+    # vreinterpret[q]_<to>_<from> — register bit reinterpretation: same
+    # total bits, lanes re-divided by the destination element width
+    m = re.match(r"^vreinterpret(q?)_([a-z0-9]+)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM and m.group(3) in _ELEM:
+        to, frm = _ELEM[m.group(2)], _ELEM[m.group(3)]
+        q = m.group(1) == "q"
+        vin = _vt(frm, q)
+        bits = 128 if q else 64
+        vout = VecType(f"{to}x{bits // _ebits(to)}_t")
+        return IntrinSpec(name, "vreinterpret", "reinterpret", (vin,),
+                          vout, bits)
 
     # conversions: vcvt[q]_<to>_<from>
     m = re.match(r"^vcvt(q?)_([a-z0-9]+)_([a-z0-9]+)$", name)

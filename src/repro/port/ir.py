@@ -45,24 +45,53 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class VecType:
-    """A NEON register type (Table 2): name + lane layout."""
-    name: str                      # 'float32x4_t'
+    """A vector register type: a Table-2 NEON name, or a *widened*
+    register produced by the re-vectorizer (repro.port.revec), which
+    re-tiles NEON-granularity strips at the target's VLEN x LMUL.
+
+    NEON types (``wide_lanes is None``) read their lane layout from
+    :data:`repro.core.vtypes.NEON_TYPES`; widened types carry it
+    explicitly (their names — 'float32x32' — are deliberately not valid
+    Table-2 spellings, so they can never be confused for source types).
+    """
+    name: str                      # 'float32x4_t' | widened 'float32x32'
+    wide_lanes: Optional[int] = None
+    wide_dtype: Optional[str] = None
 
     @property
     def lvec(self) -> LVec:
+        if self.wide_lanes is not None:
+            return LVec((self.wide_lanes,), jnp.dtype(self.wide_dtype))
         return neon_lvec(self.name)
 
     @property
     def lanes(self) -> int:
+        if self.wide_lanes is not None:
+            return self.wide_lanes
         return NEON_TYPES[self.name][0][0]
 
     @property
     def dtype(self):
+        if self.wide_dtype is not None:
+            return jnp.dtype(self.wide_dtype)
         return NEON_TYPES[self.name][1]
 
     @property
     def bits(self) -> int:
         return self.lanes * jnp.dtype(self.dtype).itemsize * 8
+
+    @property
+    def is_neon(self) -> bool:
+        return self.wide_lanes is None
+
+    def widened(self, factor: int) -> "VecType":
+        """This register re-tiled ``factor`` x wider (factor 1 = self)."""
+        if factor == 1:
+            return self
+        lanes = self.lanes * factor
+        dt = jnp.dtype(self.dtype).name
+        return VecType(name=f"{dt}x{lanes}", wide_lanes=lanes,
+                       wide_dtype=dt)
 
     def __str__(self):
         return self.name

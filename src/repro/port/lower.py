@@ -382,7 +382,8 @@ class _Lowerer:
                         attrs={"intrinsic": spec.name,
                                "isa_op": spec.isa_op,
                                "kind": spec.kind,
-                               "width_bits": spec.width_bits}))
+                               "width_bits": spec.width_bits,
+                               "_line": getattr(e, "line", 0)}))
         if spec.kind == "store":
             ptr = args[0]
             if ptr.type.const:

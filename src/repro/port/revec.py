@@ -1,0 +1,945 @@
+"""Strip-loop re-vectorization: re-tile NEON-granularity loops at the
+target's VLEN x LMUL.
+
+A kernel ported from NEON walks memory in fixed 128-bit strips — on a
+1024-bit RVV machine it uses an eighth of every register, which is
+exactly SIMDe's fixed-vlen limitation (and why BENCH_port.json's
+rvv-128..1024 columns used to be identical).  This pass rewrites the
+typed SSA IR so the strip consumes one whole register *group* per
+iteration:
+
+1. **match** — find top-level strip loops: a counted-down scalar phi
+   (``for (; n >= K; n -= K)``) plus affine pointer walks with constant
+   element strides and a straight-line vector body;
+2. **legality** — every intrinsic in the body must be lane-scalable
+   (lane-wise arithmetic, unit-stride memory, broadcasts, lane-local
+   shuffles like vrbit/vrev64/vreinterpret); cross-lane structure
+   (vget_high/low, vcombine, vext, vpadd, vzip) and in-body reductions
+   veto the loop.  Loop-carried vector accumulators are re-tilable when
+   their post-loop consumer is a horizontal reduction (vaddv needs a
+   provably-zero init — summing a tiled init would multiply it; vmaxv /
+   vminv are tile-idempotent);
+3. **re-tile** — widen every register type by the target's
+   :meth:`~repro.core.targets.Target.retile_factor`, scale the counter
+   step / compare bound / pointer-walk constants, and ``vtile``
+   loop-invariant registers (vdup'd constants, per-channel vld1'd
+   scale/bias vectors) so their lane pattern repeats across the widened
+   group;
+4. **predicated tail** — where legal, the remainder is subsumed by one
+   masked strip iteration (``vsetvli`` semantics: ``vld1m``/``vst1m``
+   carrying the active count; additive accumulators are zero-fill-safe,
+   max/min accumulators get identity fills) and the scalar cleanup loop
+   then runs zero iterations.  Where the masked form is not provably
+   safe, a narrow epilogue loop at the original granularity is kept.
+
+The matcher *assumes* the XNNPACK contract that a scalar tail loop
+computes the per-element residual of the strip body (the corpus
+differential tests check it empirically); everything else is proved
+structurally.  The result is a plain :class:`~repro.port.ir.TFunction`:
+it interprets (concretely *and* abstractly — re-tiled dynamic
+instruction estimates come for free) and compiles
+(:mod:`repro.port.compile`) like any ported kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import targets as _targets
+from .ir import (Block, IfOp, Instr, Loop, PtrType, ScalarType, TFunction,
+                 Value, VecType)
+
+__all__ = ["retile", "RetileResult", "strip_loops", "StripInfo"]
+
+
+# intrinsic isa ops whose semantics are unchanged by widening the
+# register (lane-wise, or local to a fixed sub-group of lanes)
+_SCALABLE = {
+    "vadd", "vsub", "vmul", "vmax", "vmin", "vand", "vorr", "veor",
+    "vqadd", "vqsub", "vmla", "vmls", "vfma", "vabs", "vneg",
+    "vrecpe", "vrecps", "vrsqrte", "vrsqrts",
+    "vceq", "vcgt", "vcge", "vclt", "vcle", "vbsl",
+    "vdup", "vld1", "vst1", "vcvt", "vshl_n", "vshr_n",
+    "vrbit", "vrev64", "vreinterpret",
+}
+# post-loop reduction consumers a widened accumulator may flow into
+_REDUCERS = {"vaddv", "vmaxv", "vminv"}
+
+
+# ---------------------------------------------------------------------------
+# Static affine analysis of loop phis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    """``root + off`` where root is a phi/outer Value (None = constant)."""
+    root: Optional[Value]
+    off: int
+
+
+_OPAQUE = object()
+
+
+def _sym_eval(block: Block, syms: Dict[Value, object]) -> None:
+    """Symbolic scalar/pointer dataflow over ``block``: ``syms`` maps
+    Value -> Affine | _OPAQUE; unseen argument values root themselves."""
+
+    def get(v: Value):
+        s = syms.get(v)
+        return s if s is not None else Affine(v, 0)
+
+    for ins in block.instrs:
+        if isinstance(ins, (Loop, IfOp)):
+            for r in ins.results:
+                syms[r] = _OPAQUE
+            continue
+        if ins.result is None:
+            continue
+        if ins.op == "const":
+            v = ins.attrs["value"]
+            syms[ins.result] = (Affine(None, int(v))
+                                if isinstance(v, int) else _OPAQUE)
+        elif ins.op == "sbin" and ins.attrs["op"] in ("+", "-"):
+            syms[ins.result] = _combine(get(ins.args[0]), get(ins.args[1]),
+                                        ins.attrs["op"])
+        elif ins.op == "ptradd":
+            a, b = get(ins.args[0]), get(ins.args[1])
+            if a is not _OPAQUE and b is not _OPAQUE and b.root is None:
+                syms[ins.result] = Affine(a.root, a.off + b.off)
+            else:
+                syms[ins.result] = _OPAQUE
+        else:
+            syms[ins.result] = _OPAQUE
+
+
+def _combine(a, b, op: str):
+    if a is _OPAQUE or b is _OPAQUE:
+        return _OPAQUE
+    if op == "+":
+        if a.root is not None and b.root is not None:
+            return _OPAQUE
+        return Affine(a.root if a.root is not None else b.root,
+                      a.off + b.off)
+    if b.root is None:                         # '-' only by a constant
+        return Affine(a.root, a.off - b.off)
+    return _OPAQUE
+
+
+def loop_affine(loop: Loop) -> Dict[Value, Optional[int]]:
+    """Per-phi constant step (``yield == phi + step``), or None."""
+    syms: Dict[Value, object] = {p: Affine(p, 0) for p in loop.phis}
+    _sym_eval(loop.body, syms)
+    steps: Dict[Value, Optional[int]] = {}
+    for p, y in zip(loop.phis, loop.yields):
+        s = syms.get(y, Affine(y, 0))
+        steps[p] = s.off if isinstance(s, Affine) and s.root is p else None
+    return steps
+
+
+def loop_condition(loop: Loop):
+    """``(phi, phi_offset, cmp_op, bound: Affine)`` for a condition of
+    the form ``phi + c <op> bound`` where bound contains no phi; None
+    when the loop doesn't match."""
+    syms: Dict[Value, object] = {p: Affine(p, 0) for p in loop.phis}
+    _sym_eval(loop.cond, syms)
+    cmp_ins = None
+    for ins in loop.cond.instrs:
+        if ins.result is loop.cond_value and ins.op == "scmp":
+            cmp_ins = ins
+    if cmp_ins is None:
+        return None
+    get = lambda v: syms.get(v, Affine(v, 0))  # noqa: E731
+    lhs, rhs = get(cmp_ins.args[0]), get(cmp_ins.args[1])
+    if lhs is _OPAQUE or rhs is _OPAQUE:
+        return None
+    op = cmp_ins.attrs["op"]
+    phis = set(loop.phis)
+    lhs_phi, rhs_phi = lhs.root in phis, rhs.root in phis
+    if lhs_phi == rhs_phi:
+        return None
+    if rhs_phi:                                # normalize phi to the left
+        lhs, rhs = rhs, lhs
+        op = {"<": ">", ">": "<", "<=": ">=", ">=": "<=",
+              "==": "==", "!=": "!="}[op]
+    return lhs.root, lhs.off, op, rhs
+
+
+# ---------------------------------------------------------------------------
+# Strip-loop matching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StripInfo:
+    loop: Loop
+    counter: Value                 # the down-counted scalar phi
+    step: int                      # elements consumed per iteration (> 0)
+    ptr_steps: Dict[Value, int]    # pointer phi -> element stride / iter
+    vec_phis: List[Value]          # loop-carried vector accumulators
+    scalable: bool                 # body is lane-scalable
+    reasons: List[str]
+
+
+def strip_loops(fn: TFunction) -> List[StripInfo]:
+    """Match every top-level loop of ``fn`` against the strip pattern."""
+    out = []
+    for ins in fn.body.instrs:
+        if isinstance(ins, Loop):
+            info = _match_strip(ins)
+            if info is not None:
+                out.append(info)
+    return out
+
+
+def _match_strip(loop: Loop) -> Optional[StripInfo]:
+    cond = loop_condition(loop)
+    if cond is None:
+        return None
+    phi, phi_off, op, bound = cond
+    if not isinstance(phi.type, ScalarType):
+        return None
+    steps = loop_affine(loop)
+    step = steps.get(phi)
+    if step is None or step >= 0:
+        return None                            # not counted down
+    # the canonical XNNPACK strip shape: for (; n >= K; n -= K)
+    k = -step
+    if op != ">=" or bound.root is not None or phi_off != 0 \
+            or bound.off != k or k <= 1:
+        return None
+
+    reasons: List[str] = []
+    ptr_steps: Dict[Value, int] = {}
+    vec_phis: List[Value] = []
+    for p in loop.phis:
+        if p is phi:
+            continue
+        if isinstance(p.type, PtrType):
+            d = steps.get(p)
+            if d is None:
+                reasons.append(f"pointer {p.hint!r} walk is not affine")
+            else:
+                ptr_steps[p] = d
+        elif isinstance(p.type, VecType):
+            vec_phis.append(p)
+        elif steps.get(p) != 0:
+            reasons.append(f"scalar carried value {p.hint!r} is not "
+                           f"loop-invariant")
+
+    scalable = _body_scalable(loop.body, reasons)
+    return StripInfo(loop=loop, counter=phi, step=k, ptr_steps=ptr_steps,
+                     vec_phis=vec_phis, scalable=scalable and not reasons,
+                     reasons=reasons)
+
+
+def _body_scalable(body: Block, reasons: List[str]) -> bool:
+    ok = True
+    for ins in body.instrs:
+        if isinstance(ins, (Loop, IfOp)):
+            reasons.append("nested control flow inside the strip body")
+            ok = False
+            continue
+        if ins.op != "intrin":
+            continue
+        isa_op, kind = ins.attrs["isa_op"], ins.attrs["kind"]
+        if kind in ("reduce", "get_lane"):
+            reasons.append(f"{ins.attrs['intrinsic']}: in-body reduction"
+                           f"/lane extract is width-dependent")
+            ok = False
+        elif isa_op not in _SCALABLE:
+            reasons.append(f"{ins.attrs['intrinsic']}: cross-lane "
+                           f"structure does not widen")
+            ok = False
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# The re-tiling transform
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetileResult:
+    fn: TFunction
+    target: str
+    factor: int                    # widening applied (1 = unchanged)
+    strips: int                    # strip loops found
+    retiled: int                   # strip loops actually widened
+    masked: int                    # widened strips with a predicated tail
+    notes: List[str]
+
+    @property
+    def changed(self) -> bool:
+        return self.retiled > 0
+
+
+def retile(fn: TFunction, target) -> RetileResult:
+    """Re-tile ``fn``'s strip loops at ``target``'s effective register
+    width.  Always returns a function (the original body re-emitted
+    unchanged when nothing is re-tilable) plus the decisions taken."""
+    tgt = _targets.get_target(target)
+    return _Retiler(fn, tgt).run()
+
+
+class _Retiler:
+    def __init__(self, fn: TFunction, tgt: _targets.Target):
+        self.fn = fn
+        self.tgt = tgt
+        self.notes: List[str] = []
+        self.vmap: Dict[int, Value] = {}       # id(old Value) -> new
+        self.defs = _def_map(fn)
+        self.strips = {id(s.loop): s for s in strip_loops(fn)}
+        self.retiled = 0
+        self.masked = 0
+        self.factor_used = 1
+        self._ids = itertools.count(_max_id(fn) + 1)
+
+    def val(self, ty, hint="") -> Value:
+        return Value(id=next(self._ids), type=ty, hint=hint)
+
+    def look(self, v: Value) -> Value:
+        seen = 0
+        while id(v) in self.vmap and seen < 64:
+            v = self.vmap[id(v)]
+            seen += 1
+        return v
+
+    # -- entry ------------------------------------------------------------
+    def run(self) -> RetileResult:
+        body = Block()
+        self.emit_block_into(self.fn.body, body, top=True)
+        fn = TFunction(name=self.fn.name, params=self.fn.params, body=body,
+                       writes=list(self.fn.writes), source=self.fn.source)
+        return RetileResult(fn=fn, target=self.tgt.name,
+                            factor=self.factor_used,
+                            strips=len(self.strips), retiled=self.retiled,
+                            masked=self.masked, notes=self.notes)
+
+    # -- generic region copy ----------------------------------------------
+    def emit_block_into(self, src: Block, dst: Block, top=False):
+        for ins in src.instrs:
+            strip = self.strips.get(id(ins)) if top else None
+            if strip is not None:
+                if strip.scalable and self.retile_strip(strip, dst):
+                    continue
+                if not strip.scalable:
+                    self.notes.append(
+                        f"loop kept at {strip.step}-element strips: "
+                        + "; ".join(strip.reasons))
+            dst.instrs.append(self.clone(ins))
+
+    def clone(self, ins: Instr) -> Instr:
+        if isinstance(ins, Loop):
+            cond, body = Block(), Block()
+            self.emit_block_into(ins.cond, cond)
+            self.emit_block_into(ins.body, body)
+            return Loop(op="loop",
+                        args=tuple(self.look(a) for a in ins.args),
+                        phis=[self.look(p) for p in ins.phis],
+                        init=[self.look(i) for i in ins.init],
+                        cond=cond, cond_value=self.look(ins.cond_value),
+                        body=body,
+                        yields=[self.look(y) for y in ins.yields],
+                        results=[self.look(r) for r in ins.results])
+        if isinstance(ins, IfOp):
+            then, els = Block(), Block()
+            self.emit_block_into(ins.then, then)
+            self.emit_block_into(ins.els, els)
+            return IfOp(op="if", args=tuple(self.look(a) for a in ins.args),
+                        cond_value=self.look(ins.cond_value),
+                        then=then,
+                        then_yields=[self.look(y) for y in ins.then_yields],
+                        els=els,
+                        els_yields=[self.look(y) for y in ins.els_yields],
+                        results=[self.look(r) for r in ins.results])
+        return Instr(ins.op, tuple(self.look(a) for a in ins.args),
+                     ins.result, dict(ins.attrs))
+
+    # -- strip re-tiling ---------------------------------------------------
+    def retile_strip(self, strip: StripInfo, dst: Block) -> bool:
+        loop = strip.loop
+        # uniform widening factor: the tightest register in the body
+        factor = None
+        for ty in _body_vec_types(loop):
+            f = self.tgt.retile_factor(ty.lanes, ty.dtype)
+            factor = f if factor is None else min(factor, f)
+        if not factor or factor <= 1:
+            self.notes.append(
+                f"strip at {strip.step} elems/iter: no width headroom "
+                f"on {self.tgt.name}")
+            return False
+        if not self.check_memory_sites(strip):
+            return False
+        if not self.check_accumulators(strip):
+            return False
+
+        fills = self.plan_masked_tail(strip)
+        tail_exists = _tail_consumes(self.fn, strip)
+        if fills is None and strip.vec_phis and not tail_exists:
+            self.notes.append(
+                "accumulator strip without masked tail or scalar tail "
+                "cannot cover the remainder; kept narrow")
+            return False
+
+        self.factor_used = max(self.factor_used, factor)
+        self.retiled += 1
+        saved = dict(self.vmap)
+        tile_map: Dict[int, Value] = {}
+        new_loop, result_map = self.widen_loop(strip, factor, dst,
+                                               tile_map)
+        if fills is not None:
+            # masked predicated tail subsumes remainder (+ scalar tail)
+            self.vmap = dict(saved)
+            self.vmap.update(tile_map)
+            result_map = self.emit_masked_tail(
+                strip, new_loop, factor, fills, tail_exists, dst,
+                result_map)
+            self.masked += 1
+        elif not strip.vec_phis:
+            # narrow epilogue loop mops up sub-group strips
+            self.vmap = dict(saved)
+            result_map = self.emit_epilogue(strip, new_loop, dst)
+        else:
+            self.notes.append("sub-group remainder left to the scalar "
+                              "tail (unmaskable accumulator)")
+        self.vmap = dict(saved)
+        self.vmap.update(result_map)
+        return True
+
+    # -- memory-site legality ----------------------------------------------
+    def check_memory_sites(self, strip: StripInfo) -> bool:
+        """Widening a strip batches ``factor`` consecutive iterations
+        into one: a memory site's reads/writes tile contiguously across
+        the batch only when the site sits at affine offset 0 of a
+        pointer phi whose per-iteration stride equals the site's lane
+        count.  Unrolled bodies (two 4-lane loads per 8-element
+        iteration) interleave sites across the batch, and loads through
+        loop-invariant pointers repeat the *same* elements every
+        iteration — both would silently compute wrong lanes if widened,
+        so they veto re-tiling (ROADMAP: lane-group-aware unroll
+        support)."""
+        syms: Dict[Value, object] = {p: Affine(p, 0)
+                                     for p in strip.loop.phis}
+        _sym_eval(strip.loop.body, syms)
+        phi_steps = strip.ptr_steps
+        for ins in strip.loop.body.instrs:
+            if ins.op in ("sload", "sstore"):
+                # a scalar access through a walking pointer reads/writes
+                # one element per *iteration*: the widened loop runs
+                # 1/factor as many, so it would touch 1/factor of them
+                a = syms.get(ins.args[0], Affine(ins.args[0], 0))
+                if isinstance(a, Affine) and phi_steps.get(a.root):
+                    self.notes.append(
+                        f"scalar {ins.op} walks pointer "
+                        f"{(a.root.hint or '?')!r} per iteration; "
+                        f"kept narrow")
+                    return False
+                continue
+            if ins.op != "intrin":
+                continue
+            kind = ins.attrs["kind"]
+            if kind not in ("load", "store", "load_dup"):
+                continue
+            name = ins.attrs["intrinsic"]
+            ptr = ins.args[0]
+            a = syms.get(ptr, Affine(ptr, 0))
+            root_step = (phi_steps.get(a.root)
+                         if isinstance(a, Affine) else None)
+            if kind == "load_dup":
+                # a broadcast load is invariant-safe, but widening one
+                # that walks would collapse f distinct scalars into one
+                if root_step:
+                    self.notes.append(
+                        f"{name}: per-iteration broadcast load walks "
+                        f"the buffer; kept narrow")
+                    return False
+                continue
+            lanes = (ins.result.type.lanes if kind == "load"
+                     else ins.args[1].type.lanes)
+            if not isinstance(a, Affine) or root_step is None:
+                self.notes.append(
+                    f"{name}: memory access is not rooted at a "
+                    f"strip-walking pointer; kept narrow")
+                return False
+            if a.off != 0 or root_step != lanes:
+                self.notes.append(
+                    f"{name}: access at offset {a.off} with "
+                    f"{lanes} lanes against a {root_step}-element walk "
+                    f"does not tile contiguously (unrolled strip?); "
+                    f"kept narrow")
+                return False
+        return True
+
+    # -- accumulator legality ---------------------------------------------
+    def check_accumulators(self, strip: StripInfo) -> bool:
+        for phi, res, init in zip(strip.loop.phis, strip.loop.results,
+                                  strip.loop.init):
+            if phi not in strip.vec_phis:
+                continue
+            users = _users_of(self.fn, res)
+            if not users or not all(
+                    u.op == "intrin" and
+                    u.attrs.get("isa_op") in _REDUCERS for u in users):
+                self.notes.append(
+                    f"accumulator {phi.hint!r}: post-loop consumer is "
+                    f"not a horizontal reduction; strip kept narrow")
+                return False
+            ops = {u.attrs["isa_op"] for u in users}
+            if "vaddv" in ops and not self._is_zero_vec(init):
+                self.notes.append(
+                    f"accumulator {phi.hint!r}: vaddv over a tiled "
+                    f"non-zero init would multiply it; kept narrow")
+                return False
+        return True
+
+    def _is_zero_vec(self, v: Value) -> bool:
+        d = self.defs.get(id(v))
+        if d is None or d.op != "intrin" or d.attrs.get("kind") != "dup":
+            return False
+        c = self.defs.get(id(d.args[0]))
+        return c is not None and c.op == "const" and \
+            float(c.attrs["value"]) == 0.0
+
+    # -- masked-tail legality ----------------------------------------------
+    def plan_masked_tail(self, strip: StripInfo) -> Optional[Dict[int, object]]:
+        """Decide whether one predicated strip iteration can subsume the
+        remainder.  Returns {id(load instr): fill value} or None."""
+        # one active count drives every site: each pointer must advance
+        # exactly one element per counter element
+        for p, d in strip.ptr_steps.items():
+            if d != strip.step:
+                self.notes.append(
+                    f"pointer {p.hint!r} advances {d}/iter against a "
+                    f"{strip.step}-element counter; masked tail off")
+                return None
+        # dataflow over the body: masked-off load lanes must stay
+        # neutral through every accumulator update (zero through
+        # multiplies into additive updates; identity fills for max/min)
+        fills: Dict[int, object] = {}
+        zeroish: Dict[int, bool] = {}
+        use_count: Dict[int, int] = {}
+        loads: Dict[int, Instr] = {}
+        phi_ids = {id(p) for p in strip.vec_phis}
+        preserved: Dict[int, int] = {}         # value id -> phi id
+        for ins in strip.loop.body.instrs:
+            for a in ins.args:
+                use_count[id(a)] = use_count.get(id(a), 0) + 1
+        for ins in strip.loop.body.instrs:
+            if ins.op != "intrin":
+                continue
+            kind, isa_op = ins.attrs["kind"], ins.attrs["isa_op"]
+            rid = id(ins.result) if ins.result is not None else None
+            if kind == "load":
+                loads[rid] = ins
+                fills[id(ins)] = 0
+                zeroish[rid] = True
+                continue
+            if rid is None:                    # store: lanes masked off
+                continue
+
+            def acc_of(v):
+                if id(v) in phi_ids:
+                    return id(v)
+                return preserved.get(id(v))
+
+            vec_args = [a for a in ins.args
+                        if isinstance(a.type, VecType)]
+            az = [zeroish.get(id(a), False) for a in vec_args]
+            zeroish[rid] = False
+            if isa_op in ("vmul", "vand"):
+                zeroish[rid] = any(az)
+            elif isa_op in ("vsub",):
+                zeroish[rid] = all(az)
+            elif isa_op == "vadd":
+                zeroish[rid] = all(az)
+                for x, y in ((ins.args[0], ins.args[1]),
+                             (ins.args[1], ins.args[0])):
+                    if acc_of(x) is not None and zeroish.get(id(y), False):
+                        preserved[rid] = acc_of(x)
+            elif isa_op in ("vfma", "vmla", "vmls"):
+                acc = acc_of(ins.args[0])
+                if acc is not None and any(
+                        zeroish.get(id(a), False) for a in ins.args[1:]):
+                    preserved[rid] = acc
+            elif isa_op in ("vmax", "vmin"):
+                for x, y in ((ins.args[0], ins.args[1]),
+                             (ins.args[1], ins.args[0])):
+                    if acc_of(x) is not None and id(y) in loads \
+                            and use_count.get(id(y), 0) == 1:
+                        ld = loads[id(y)]
+                        fills[id(ld)] = _identity_fill(
+                            ld.result.type, minimum=(isa_op == "vmax"))
+                        preserved[rid] = acc_of(x)
+        for phi, y in zip(strip.loop.phis, strip.loop.yields):
+            if phi not in strip.vec_phis:
+                continue
+            if not (y is phi or preserved.get(id(y)) == id(phi)):
+                self.notes.append(
+                    f"accumulator {phi.hint!r}: masked-off tail lanes "
+                    f"are not provably neutral; masked tail off")
+                return None
+        return fills
+
+    # -- widened main loop -------------------------------------------------
+    def widen_loop(self, strip: StripInfo, factor: int, dst: Block,
+                   tile_map: Dict[int, Value]):
+        loop = strip.loop
+
+        # widen loop-invariant vector registers used inside the body
+        for v in _outer_vec_uses(loop):
+            self.emit_tile(v, factor, dst, tile_map)
+
+        new_phis, new_results, new_init = [], [], []
+        result_map: Dict[int, Value] = {}
+        for p, r, i in zip(loop.phis, loop.results, loop.init):
+            if p in strip.vec_phis:
+                wty = p.type.widened(factor)
+                np_, nr = self.val(wty, p.hint), self.val(wty, r.hint)
+                init_v = self.emit_tile(i, factor, dst, tile_map)
+                self.vmap[id(p)] = np_
+                result_map[id(r)] = nr
+                new_phis.append(np_)
+                new_results.append(nr)
+                new_init.append(init_v)
+            else:
+                new_phis.append(p)
+                new_results.append(r)
+                new_init.append(self.look(i))
+
+        cond = self.widen_block(loop.cond, strip, factor)
+        body = self.widen_block(loop.body, strip, factor)
+        new = Loop(op="loop", args=tuple(new_init), phis=new_phis,
+                   init=new_init, cond=cond,
+                   cond_value=self.look(loop.cond_value), body=body,
+                   yields=[self.look(y) for y in loop.yields],
+                   results=new_results)
+        dst.instrs.append(new)
+        self.notes.append(
+            f"strip re-tiled {strip.step} -> {strip.step * factor} "
+            f"elems/iter on {self.tgt.name} ({factor}x)")
+        return new, result_map
+
+    def emit_tile(self, v: Value, factor: int, dst: Block,
+                  tile_map: Dict[int, Value]) -> Value:
+        if id(v) in tile_map:
+            return tile_map[id(v)]
+        wty = v.type.widened(factor)
+        wide = self.val(wty, hint=(v.hint or "inv") + ".wide")
+        dst.instrs.append(Instr(
+            "intrin", (v,), wide,
+            attrs={"intrinsic": f"revec.tile[{factor}x]",
+                   "isa_op": "vtile", "kind": "tile", "reps": factor,
+                   "width_bits": wty.bits}))
+        tile_map[id(v)] = wide
+        self.vmap[id(v)] = wide
+        return wide
+
+    def widen_block(self, src: Block, strip: StripInfo,
+                    factor: int) -> Block:
+        """Copy a strip cond/body block, widening vector values and
+        scaling the counter/pointer-walk constants."""
+        scale = _scaled_consts(src, strip)
+        out = Block()
+        for ins in src.instrs:
+            if ins.op == "const" and id(ins) in scale:
+                nv = self.val(ins.result.type, ins.result.hint)
+                self.vmap[id(ins.result)] = nv
+                out.instrs.append(Instr(
+                    "const", (), nv,
+                    attrs={"value": ins.attrs["value"] * factor}))
+            elif ins.op == "intrin":
+                out.instrs.append(self.widen_intrin(ins, factor))
+            else:
+                out.instrs.append(self.remap_plain(ins))
+        return out
+
+    def remap_plain(self, ins: Instr) -> Instr:
+        new_args = tuple(self.look(a) for a in ins.args)
+        res = ins.result
+        if res is not None:
+            nr = self.val(res.type, res.hint)
+            self.vmap[id(res)] = nr
+            res = nr
+        return Instr(ins.op, new_args, res, dict(ins.attrs))
+
+    def widen_intrin(self, ins: Instr, factor: int,
+                     override=None) -> Instr:
+        new_args = tuple(self.look(a) for a in ins.args)
+        res = ins.result
+        attrs = dict(ins.attrs)
+        attrs["width_bits"] = ins.attrs["width_bits"] * factor
+        if override:
+            attrs.update(override)
+        if res is not None:
+            nty = (res.type.widened(factor)
+                   if isinstance(res.type, VecType) else res.type)
+            nr = self.val(nty, res.hint)
+            self.vmap[id(res)] = nr
+            res = nr
+        return Instr("intrin", new_args, res, attrs)
+
+    # -- predicated tail ----------------------------------------------------
+    def emit_masked_tail(self, strip: StripInfo, new_loop: Loop,
+                         factor: int, fills: Dict[int, object],
+                         tail_exists: bool, dst: Block,
+                         result_map: Dict[int, Value]) -> Dict[int, Value]:
+        """One masked strip iteration over the remaining elements, then
+        fold the consumed count out of the counter/pointers so any
+        scalar tail loop runs zero iterations."""
+        loop = strip.loop
+        idx = {id(p): i for i, p in enumerate(loop.phis)}
+        n_res = new_loop.results[idx[id(strip.counter)]]
+
+        # active count: everything left when a scalar tail would have
+        # finished the job; otherwise only whole original strips
+        cty = strip.counter.type
+        if tail_exists:
+            cnt = n_res
+        else:
+            k = self.val(cty, "k")
+            dst.instrs.append(Instr("const", (), k,
+                                    attrs={"value": strip.step}))
+            rem = self.val(cty, "rem")
+            dst.instrs.append(Instr("sbin", (n_res, k), rem,
+                                    attrs={"op": "%"}))
+            cnt = self.val(cty, "cnt")
+            dst.instrs.append(Instr("sbin", (n_res, rem), cnt,
+                                    attrs={"op": "-"}))
+
+        # bind phis to the widened loop's results and copy the body,
+        # loads/stores becoming their predicated forms
+        for p, r in zip(loop.phis, new_loop.results):
+            self.vmap[id(p)] = r
+        scale = _scaled_consts(loop.body, strip)
+        for ins in loop.body.instrs:
+            if ins.op == "const" and id(ins) in scale:
+                nv = self.val(ins.result.type, ins.result.hint)
+                self.vmap[id(ins.result)] = nv
+                dst.instrs.append(Instr(
+                    "const", (), nv,
+                    attrs={"value": ins.attrs["value"] * factor}))
+            elif ins.op == "intrin":
+                kind = ins.attrs["kind"]
+                if kind == "load":
+                    out = self.widen_intrin(ins, factor, override={
+                        "kind": "load_masked", "isa_op": "vld1m",
+                        "intrinsic": ins.attrs["intrinsic"] + "[masked]",
+                        "fill": fills.get(id(ins), 0)})
+                    out.args = (out.args[0], cnt)
+                elif kind == "store":
+                    out = self.widen_intrin(ins, factor, override={
+                        "kind": "store_masked", "isa_op": "vst1m",
+                        "intrinsic": ins.attrs["intrinsic"] + "[masked]"})
+                    out.args = (out.args[0], out.args[1], cnt)
+                else:
+                    out = self.widen_intrin(ins, factor)
+                dst.instrs.append(out)
+            else:
+                dst.instrs.append(self.remap_plain(ins))
+
+        # downstream: counter loses cnt, pointers advance cnt elements,
+        # accumulators become their tail-updated values
+        final: Dict[int, Value] = dict(result_map)
+        left = self.val(strip.counter.type, "n.left")
+        dst.instrs.append(Instr("sbin", (n_res, cnt), left,
+                                attrs={"op": "-"}))
+        for p, old_r in zip(loop.phis, loop.results):
+            if p is strip.counter:
+                final[id(old_r)] = left
+            elif isinstance(p.type, PtrType):
+                adv = self.val(p.type, p.hint)
+                dst.instrs.append(Instr("ptradd",
+                                        (self.look(old_r), cnt), adv))
+                final[id(old_r)] = adv
+            elif p in strip.vec_phis:
+                y = loop.yields[idx[id(p)]]
+                final[id(old_r)] = self.look(y)
+        self.notes.append("remainder subsumed by one predicated strip "
+                          "(vld1m/vst1m active count)")
+        return final
+
+    # -- narrow epilogue (masked tail not provable) -------------------------
+    def emit_epilogue(self, strip: StripInfo, new_loop: Loop,
+                      dst: Block) -> Dict[int, Value]:
+        """Clone the *original* strip loop after the widened one: it
+        consumes the remaining sub-group strips at NEON granularity and
+        feeds the (kept) scalar tail.  Only for accumulator-free strips."""
+        loop = strip.loop
+        epi_init = [self.look(r) for r in new_loop.results]
+        for p in loop.phis:
+            self.vmap[id(p)] = self.val(p.type, p.hint)
+        cond, body = Block(), Block()
+        for ins in loop.cond.instrs:
+            body_ins = self.remap_plain(ins) if ins.op != "intrin" \
+                else self.widen_intrin(ins, 1)
+            cond.instrs.append(body_ins)
+        for ins in loop.body.instrs:
+            body.instrs.append(self.remap_plain(ins) if ins.op != "intrin"
+                               else self.widen_intrin(ins, 1))
+        epi_results = [self.val(r.type, r.hint) for r in loop.results]
+        epi = Loop(op="loop", args=tuple(epi_init),
+                   phis=[self.look(p) for p in loop.phis],
+                   init=epi_init, cond=cond,
+                   cond_value=self.look(loop.cond_value), body=body,
+                   yields=[self.look(y) for y in loop.yields],
+                   results=epi_results)
+        dst.instrs.append(epi)
+        self.notes.append("narrow epilogue strip kept (masked tail not "
+                          "provable)")
+        return {id(r): nr for r, nr in zip(loop.results, epi_results)}
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _identity_fill(ty: VecType, minimum: bool):
+    """Neutral element for a max (minimum=True fills -inf/INT_MIN) or
+    min accumulator load."""
+    dt = jnp.dtype(ty.dtype)
+    if jnp.issubdtype(dt, jnp.floating):
+        return float("-inf") if minimum else float("inf")
+    info = jnp.iinfo(dt)
+    return int(info.min) if minimum else int(info.max)
+
+
+def _body_vec_types(loop: Loop) -> List[VecType]:
+    tys, seen = [], set()
+
+    def note(ty):
+        if isinstance(ty, VecType) and ty.name not in seen:
+            seen.add(ty.name)
+            tys.append(ty)
+
+    for p in loop.phis:
+        note(p.type)
+    for ins in loop.body.instrs:
+        for a in ins.args:
+            note(a.type)
+        if ins.result is not None:
+            note(ins.result.type)
+    return tys
+
+
+def _outer_vec_uses(loop: Loop) -> List[Value]:
+    """Vector values defined outside the loop but read in its body."""
+    defined = {id(p) for p in loop.phis}
+    for ins in loop.body.instrs:
+        if ins.result is not None:
+            defined.add(id(ins.result))
+    out, seen = [], set()
+    for ins in loop.body.instrs:
+        for a in ins.args:
+            if isinstance(a.type, VecType) and id(a) not in defined \
+                    and id(a) not in seen:
+                seen.add(id(a))
+                out.append(a)
+    return out
+
+
+def _scaled_consts(block: Block, strip: StripInfo) -> set:
+    """Const instrs whose value must scale with the widening factor:
+    pointer-walk deltas, the counter step, and the compare bound."""
+    consts: Dict[int, Instr] = {}
+    for ins in block.instrs:
+        if ins.op == "const":
+            consts[id(ins.result)] = ins
+    ptrish = {id(p) for p in strip.ptr_steps}
+    out = set()
+    for ins in block.instrs:
+        if ins.op == "ptradd" and id(ins.args[0]) in ptrish:
+            if id(ins.args[1]) in consts:
+                out.add(id(consts[id(ins.args[1])]))
+            if ins.result is not None:
+                ptrish.add(id(ins.result))
+        elif ins.op in ("sbin", "scmp"):
+            if any(a is strip.counter for a in ins.args):
+                for a in ins.args:
+                    if id(a) in consts:
+                        out.add(id(consts[id(a)]))
+    return out
+
+
+def _tail_consumes(fn: TFunction, strip: StripInfo) -> bool:
+    """Is there a later top-level loop seeded with this strip's counter
+    result (the XNNPACK scalar-tail shape)?"""
+    n_res = strip.loop.results[
+        [i for i, p in enumerate(strip.loop.phis)
+         if p is strip.counter][0]]
+    seen_strip = False
+    for ins in fn.body.instrs:
+        if ins is strip.loop:
+            seen_strip = True
+            continue
+        if seen_strip and isinstance(ins, Loop):
+            if any(i is n_res for i in ins.init):
+                return True
+    return False
+
+
+def _def_map(fn: TFunction) -> Dict[int, Instr]:
+    defs: Dict[int, Instr] = {}
+
+    def walk(block: Block):
+        for ins in block.instrs:
+            if ins.result is not None:
+                defs[id(ins.result)] = ins
+            if isinstance(ins, Loop):
+                walk(ins.cond)
+                walk(ins.body)
+            elif isinstance(ins, IfOp):
+                walk(ins.then)
+                walk(ins.els)
+
+    walk(fn.body)
+    return defs
+
+
+def _users_of(fn: TFunction, v: Value) -> List[Instr]:
+    users: List[Instr] = []
+
+    def walk(block: Block):
+        for ins in block.instrs:
+            if any(a is v for a in ins.args):
+                if ins not in users:
+                    users.append(ins)
+            if isinstance(ins, Loop):
+                if any(a is v for a in ins.init) or \
+                        any(a is v for a in ins.yields):
+                    if ins not in users:
+                        users.append(ins)
+                walk(ins.cond)
+                walk(ins.body)
+            elif isinstance(ins, IfOp):
+                walk(ins.then)
+                walk(ins.els)
+
+    walk(fn.body)
+    return users
+
+
+def _max_id(fn: TFunction) -> int:
+    top = max((p.id for p in fn.params), default=0)
+
+    def walk(block: Block):
+        nonlocal top
+        for ins in block.instrs:
+            for v in ins.args:
+                top = max(top, v.id)
+            if ins.result is not None:
+                top = max(top, ins.result.id)
+            if isinstance(ins, Loop):
+                for v in ins.phis + ins.results:
+                    top = max(top, v.id)
+                walk(ins.cond)
+                walk(ins.body)
+            elif isinstance(ins, IfOp):
+                for v in ins.results:
+                    top = max(top, v.id)
+                walk(ins.then)
+                walk(ins.els)
+
+    walk(fn.body)
+    return top

@@ -18,20 +18,25 @@ import numpy as np
 from repro.models import model as M
 
 
-def make_prefill_step(cfg):
+def make_prefill_step(cfg, target=None):
     def prefill(params, cache, batch):
         logits, cache, _ = M.forward(params, cfg, batch, mode="prefill",
-                                     cache=cache)
+                                     cache=cache, target=target)
         return logits[:, -1], cache
     return prefill
 
 
-def make_serve_step(cfg):
-    """One decode step: (params, cache, token, lengths) -> (logits, cache)."""
+def make_serve_step(cfg, target=None):
+    """One decode step: (params, cache, token, lengths) -> (logits, cache).
+
+    ``target`` pins every lowering selection in the step to an explicit
+    machine model — a multi-backend deployment builds one jitted step
+    per backend and routes requests between them.
+    """
     def serve_step(params, cache, tokens, lengths):
         logits, cache, _ = M.forward(params, cfg, {"tokens": tokens},
                                      mode="decode", cache=cache,
-                                     lengths=lengths)
+                                     lengths=lengths, target=target)
         return logits[:, 0], cache
     return serve_step
 
@@ -43,14 +48,15 @@ class Engine:
     max_batch: int
     max_seq: int
     temperature: float = 0.0
+    target: Any = None             # explicit lowering target (None=ambient)
 
     def __post_init__(self):
         p_off = self.cfg.n_patches if self.cfg.family == "vlm" else 0
         self.cache = M.init_cache(self.cfg, self.max_batch,
                                   self.max_seq + p_off)
         self.lengths = jnp.zeros((self.max_batch,), jnp.int32)
-        self._prefill = jax.jit(make_prefill_step(self.cfg))
-        self._step = jax.jit(make_serve_step(self.cfg))
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.target))
+        self._step = jax.jit(make_serve_step(self.cfg, self.target))
 
     def prefill(self, prompts: jnp.ndarray, extra: Optional[dict] = None):
         """prompts:(B, S_prompt) — fills the cache, returns first tokens."""

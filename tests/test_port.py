@@ -295,7 +295,7 @@ def test_abstract_mode_rejects_data_dependent_trip_count():
     x = np.full(4, 1.0, np.float32)
     # concrete execution is fine (real trip count)
     k(4, x, np.zeros(4, np.float32))
-    with pytest.raises(port.ExecError, match="vector-produced scalar"):
+    with pytest.raises(port.ExecError, match="vaddvq_f32"):
         k.estimate(4, x, np.zeros(4, np.float32), target="rvv-128")
 
 
@@ -311,7 +311,8 @@ def test_abstract_mode_rejects_data_dependent_branch():
     k = port.compile_kernel(src)
     x = np.full(4, 1.0, np.float32)
     k(4, x, np.zeros(1, np.float32))
-    with pytest.raises(port.ExecError, match="vector-produced scalar"):
+    with pytest.raises(port.ExecError,
+                       match="scalar produced by vector intrinsic"):
         k.estimate(4, x, np.zeros(1, np.float32), target="rvv-128")
 
 

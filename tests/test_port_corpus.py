@@ -83,7 +83,7 @@ def test_listing_patterns_win_on_rvv128(sweep_reports):
 def test_bench_json_emittable(tmp_path, sweep_reports):
     from benchmarks import port_suite
     path = port_suite.emit_json(sweep_reports,
-                                str(tmp_path / "BENCH_port.json"))
+                                path=str(tmp_path / "BENCH_port.json"))
     import json
     with open(path) as f:
         data = json.load(f)
@@ -91,3 +91,8 @@ def test_bench_json_emittable(tmp_path, sweep_reports):
     assert len(data["kernels"]) >= 10
     row = data["kernels"]["bitreverse_u8"]["targets"]["rvv-64"]
     assert "vrbitq_u8" in row["unmapped"]
+    # the re-vectorized column diverges across the family
+    k1024 = data["kernels"]["xnn_f32_vadd_ukernel"]["targets"]["rvv-1024"]
+    k128 = data["kernels"]["xnn_f32_vadd_ukernel"]["targets"]["rvv-128"]
+    assert k1024["retile_factor"] == 8
+    assert k1024["revec_instrs"] < k128["revec_instrs"]

@@ -403,3 +403,47 @@ def test_vget_high_generic_pallas_parity(shape):
     n = shape[-1]
     np.testing.assert_array_equal(np.asarray(g), np.asarray(x[..., n // 2:]))
     np.testing.assert_array_equal(np.asarray(g), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# explicit target= through the model-level ops (multi-backend serving)
+# ---------------------------------------------------------------------------
+
+def test_ops_accept_explicit_target():
+    """attention/ssd/gemm take target= and the selection is made against
+    that machine — not the ambient thread-scoped target."""
+    import jax
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    base = np.asarray(ops.attention(q, k, v, causal=True))
+    for tgt in ("rvv-128", "tpu-v5e"):
+        out = np.asarray(ops.attention(q, k, v, causal=True, target=tgt))
+        np.testing.assert_allclose(out, base, rtol=2e-5, atol=1e-5)
+    a = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ops.gemm(a, b, target="rvv-256")),
+        np.asarray(a @ b), rtol=1e-5, atol=1e-5)
+
+
+def test_forward_threads_target_per_request():
+    """model.forward(target=...) pins every attention/ssd selection for
+    that request; selections against the explicit target actually land
+    in the cache keyed on it."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config("gemma3-1b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    tokens = jax.random.randint(key, (1, 8), 2, cfg.vocab_size)
+    amb, _, _ = M.forward(params, cfg, {"tokens": tokens}, mode="train")
+    for tgt in ("rvv-1024", "tpu-v5e"):
+        out, _, _ = M.forward(params, cfg, {"tokens": tokens},
+                              mode="train", target=tgt)
+        np.testing.assert_allclose(
+            np.asarray(out.astype(jnp.float32)),
+            np.asarray(amb.astype(jnp.float32)), rtol=5e-2, atol=5e-2)
