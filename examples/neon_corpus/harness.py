@@ -156,7 +156,9 @@ def _ref_vqaddsub(n, a, b, ya, ys):
 
 def _ref_reduce_max(n, x, out_buf):
     out = out_buf.copy()
-    out[0] = np.max(x[:n])
+    # the kernel seeds its accumulator with x[0] before the strip loop,
+    # so the n == 0 result is x[0] (and x[0] participates for any n)
+    out[0] = np.max(x[:max(n, 1)])
     return out
 
 
@@ -167,16 +169,76 @@ def _ref_vcvt(n, x, y):
     return out
 
 
+def _ref_vaddl_requant(n, a, b, bias, y):
+    out = y.copy()
+    s = a[:n].astype(np.int32) + b[:n].astype(np.int32) + bias
+    out[:n] = np.clip(s, 0, 255).astype(np.uint8)
+    return out
+
+
+def _ref_vmull_requant(n, a, b, y):
+    out = y.copy()
+    p = (a[:n].astype(np.int32) * b[:n].astype(np.int32)) >> 5
+    out[:n] = np.clip(p, -128, 127).astype(np.int8)
+    return out
+
+
+def _ref_shl1_widen_narrow(n, x, y):
+    out = y.copy()
+    t = (x[:n].astype(np.int16) << 1) & 0xFF
+    out[:n] = t.astype(np.uint8).view(np.int8)
+    return out
+
+
+def _ref_cmul(n, a, b, y):
+    """n complex pairs; the strip computes in float32 two-step (vmul,
+    then vmls/vmla), the scalar tail in double rounded once at store —
+    the reference mirrors both exactly."""
+    out = y.copy()
+    m = (n // 4) * 4
+    ar, ai = a[0:2 * m:2], a[1:2 * m:2]
+    br, bi = b[0:2 * m:2], b[1:2 * m:2]
+    out[0:2 * m:2] = ar * br - ai * bi
+    out[1:2 * m:2] = ar * bi + ai * br
+    for i in range(m, n):
+        re = float(a[2 * i]) * float(b[2 * i]) - \
+            float(a[2 * i + 1]) * float(b[2 * i + 1])
+        im = float(a[2 * i]) * float(b[2 * i + 1]) + \
+            float(a[2 * i + 1]) * float(b[2 * i])
+        out[2 * i] = np.float32(re)
+        out[2 * i + 1] = np.float32(im)
+    return out
+
+
+def _ref_qs8_gemm(m, k, a, b, c):
+    out = c.copy()
+    if m:
+        a2 = a[:m * k].astype(np.int32).reshape(m, k)
+        b2 = b[:k * 8].astype(np.int32).reshape(k, 8)
+        out[:m * 8] = (a2 @ b2).astype(np.int16).reshape(-1)
+    return out
+
+
 # -- the corpus ---------------------------------------------------------------
 
 def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
-    """``n`` drives strip-only kernels (multiple of 16); ``tail_n`` the
-    kernels with scalar tails (deliberately not a multiple of 4)."""
-    assert n % 16 == 0, "n must be a multiple of 16 (vrbit strips)"
+    """``n`` drives strip-only kernels (a multiple of 16 covers every
+    strip width exactly; any value is legal — references mirror the
+    kernels' floor-to-strip semantics, which is what the conformance
+    suite sweeps); ``tail_n`` drives the kernels with scalar tails
+    (deliberately not a multiple of 4 by default)."""
 
     def args_abn(rng):     # (n, a, b, y) with tail
         return (tail_n, _rand(rng, tail_n), _rand(rng, tail_n),
                 np.zeros(tail_n, F))
+
+    def gemm_args(rng):    # m x 8 tile over k = n (small operands: the
+        # int16 accumulator must stay exact — |sum| <= 4 * k)
+        m, k = 3, n
+        return (m, k,
+                rng.integers(-2, 3, max(1, m * k)).astype(np.int8),
+                rng.integers(-2, 3, max(1, k * 8)).astype(np.int8),
+                np.zeros(m * 8, np.int16))
 
     return [
         Case("vadd.c", "xnn_f32_vadd_ukernel", args_abn, _ref_vadd),
@@ -226,6 +288,31 @@ def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
              lambda rng: (n, _rand(rng, n, -100, 100),
                           np.zeros(n, np.int32)),
              _ref_vcvt),
+        Case("vaddl_requant.c", "qs8_vaddl_requant_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          int(rng.integers(-100, 100)),
+                          np.zeros(tail_n, np.uint8)),
+             _ref_vaddl_requant),
+        Case("vmull_requant.c", "qs8_vmul_requant_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          np.zeros(tail_n, np.int8)),
+             _ref_vmull_requant),
+        Case("vmovl_shift.c", "s8_shl1_widen_narrow_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(-128, 128, tail_n).astype(np.int8),
+                          np.zeros(tail_n, np.int8)),
+             _ref_shl1_widen_narrow),
+        Case("vcmul.c", "cmul_f32_ukernel",
+             lambda rng: (tail_n, _rand(rng, 2 * tail_n),
+                          _rand(rng, 2 * tail_n),
+                          np.zeros(2 * tail_n, F)),
+             _ref_cmul),
+        Case("qs8gemm.c", "qs8_gemm_mx8_ukernel", gemm_args,
+             _ref_qs8_gemm),
     ]
 
 

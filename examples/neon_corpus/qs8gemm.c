@@ -1,0 +1,23 @@
+/* qs8 GEMM microkernel, m x 8 output tile — the XNNPACK qs8-gemm shape
+ * with *nested* counted loops: the outer loop walks output rows, the
+ * inner loop runs the widening dot product along k (vld1_dup broadcast
+ * of the A element, vmull -> RVV vwmul, int16 accumulator).  Operands
+ * must stay small enough that the int16 accumulator is exact (the
+ * harness draws from [-2, 2] with k <= 4096).
+ *   c[i*8 + j] = sum_k a[i*k + kk] * b[kk*8 + j]                      */
+#include <arm_neon.h>
+
+void qs8_gemm_mx8_ukernel(size_t m, size_t k, const int8_t* a,
+                          const int8_t* b, int16_t* c) {
+  for (; m != 0; m -= 1) {
+    const int8_t* bp = b;
+    int16x8_t vacc = vdupq_n_s16(0);
+    size_t kk = k;
+    for (; kk != 0; kk -= 1) {
+      int8x8_t vb = vld1_s8(bp); bp += 8;
+      int8x8_t va = vld1_dup_s8(a); a += 1;
+      vacc = vaddq_s16(vacc, vmull_s8(va, vb));
+    }
+    vst1q_s16(c, vacc); c += 8;
+  }
+}

@@ -1,0 +1,25 @@
+/* Widening qs8 add with unsigned requantization — the XNNPACK qs8-vadd
+ * shape on the widening path (paper Table 2's vaddl/vqmovun rows):
+ *   y[i] = sat_u8((int16) a[i] + (int16) b[i] + bias)
+ * vaddl_s8 is RVV's single vwadd.vv; vqmovun_s16 a single vnclipu.
+ * |bias| stays small enough that the int16 accumulator is exact.      */
+#include <arm_neon.h>
+
+void qs8_vaddl_requant_ukernel(size_t n, const int8_t* a, const int8_t* b,
+                               int32_t bias, uint8_t* y) {
+  const int16x8_t vbias = vdupq_n_s16((int16_t) bias);
+  for (; n >= 8; n -= 8) {
+    int8x8_t va = vld1_s8(a); a += 8;
+    int8x8_t vb = vld1_s8(b); b += 8;
+    int16x8_t vacc = vaddl_s8(va, vb);
+    vacc = vaddq_s16(vacc, vbias);
+    vst1_u8(y, vqmovun_s16(vacc)); y += 8;
+  }
+  for (; n != 0; n -= 1) {
+    int32_t s = (int32_t) *a + (int32_t) *b + bias;
+    a += 1; b += 1;
+    s = s > 255 ? 255 : s;
+    s = s < 0 ? 0 : s;
+    *y = (uint8_t) s; y += 1;
+  }
+}

@@ -1,0 +1,28 @@
+/* Interleaved complex multiply over (re, im) pairs — the struct-load
+ * path: vld2q de-interleaves (RVV vlseg2e32.v), vst2q re-interleaves
+ * (vsseg2e32.v).  n counts complex elements; buffers hold 2n floats.
+ *   y[2i]   = a_re*b_re - a_im*b_im
+ *   y[2i+1] = a_re*b_im + a_im*b_re                                   */
+#include <arm_neon.h>
+
+void cmul_f32_ukernel(size_t n, const float* a, const float* b, float* y) {
+  for (; n >= 4; n -= 4) {
+    float32x4x2_t va = vld2q_f32(a); a += 8;
+    float32x4x2_t vb = vld2q_f32(b); b += 8;
+    float32x4_t vre = vmulq_f32(va.val[0], vb.val[0]);
+    vre = vmlsq_f32(vre, va.val[1], vb.val[1]);
+    float32x4_t vim = vmulq_f32(va.val[0], vb.val[1]);
+    vim = vmlaq_f32(vim, va.val[1], vb.val[0]);
+    float32x4x2_t vy;
+    vy.val[0] = vre;
+    vy.val[1] = vim;
+    vst2q_f32(y, vy); y += 8;
+  }
+  for (; n != 0; n -= 1) {
+    float re = a[0] * b[0] - a[1] * b[1];
+    float im = a[0] * b[1] + a[1] * b[0];
+    y[0] = re;
+    y[1] = im;
+    a += 2; b += 2; y += 2;
+  }
+}

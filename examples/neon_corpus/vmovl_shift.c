@@ -1,0 +1,18 @@
+/* Widen / operate / truncating-narrow round trip (vmovl -> vsext.vf2,
+ * vmovn -> vncvt): y[i] = (int8) (((int16) x[i]) << 1), wrapping —
+ * the non-saturating narrow keeps only the low byte.                  */
+#include <arm_neon.h>
+
+void s8_shl1_widen_narrow_ukernel(size_t n, const int8_t* x, int8_t* y) {
+  for (; n >= 8; n -= 8) {
+    int16x8_t vx = vmovl_s8(vld1_s8(x)); x += 8;
+    vx = vshlq_n_s16(vx, 1);
+    vst1_s8(y, vmovn_s16(vx)); y += 8;
+  }
+  for (; n != 0; n -= 1) {
+    int32_t t = ((int32_t) *x) << 1; x += 1;
+    t = t & 255;
+    t = t > 127 ? t - 256 : t;
+    *y = (int8_t) t; y += 1;
+  }
+}

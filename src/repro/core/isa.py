@@ -35,7 +35,8 @@ __all__ = [
     "vext", "vrev64", "vrbit", "vdup", "vpadd", "vaddv", "vmaxv", "vminv",
     "vrecpe", "vrecps", "vrsqrte", "vrsqrts", "vcvt", "vzip", "vtbl",
     "vld1", "vst1", "vld1m", "vst1m", "vtile", "vqadd", "vqsub",
-    "vreinterpret",
+    "vreinterpret", "vmull", "vaddl", "vsubl", "vmovl", "vmovn",
+    "vqmovn", "vqmovun", "vld2", "vst2", "vld2m", "vst2m",
 ]
 
 
@@ -494,6 +495,17 @@ def vzip(a, b):
     return dispatch("vzip", a, b)
 
 
+
+def _strip_width(bits: int) -> int:
+    """Saturate a logical-register width at NEON Q-register (strip)
+    granularity — the same rule as registry._logical_width_bits.  A
+    register group wider than one strip (a re-vectorized widened strip,
+    or the wide side of a vwmul) strip-mines across groups rather than
+    invalidating the tier; the cost models charge the extra register
+    micro-ops."""
+    return min(128, bits)
+
+
 # -- memory ops (the port frontend's load/store surface) ---------------------
 #
 # ``vld1``/``vst1`` mirror NEON's unit-stride load/store intrinsics in
@@ -504,7 +516,7 @@ def vzip(a, b):
 # Q-register width) — hence the explicit ``width=``/``cost=`` models.
 
 def _vld1_width(buf, offset, lanes, *_, **__):
-    return int(lanes) * jnp.dtype(buf.dtype).itemsize * 8
+    return _strip_width(int(lanes) * jnp.dtype(buf.dtype).itemsize * 8)
 
 
 def _vld1_cost(buf, offset, lanes, *_, **__):
@@ -542,7 +554,8 @@ def vld1(buf, offset, lanes):
 
 
 def _vst1_width(buf, offset, val, *_, **__):
-    return int(np.prod(val.shape) or 1) * jnp.dtype(val.dtype).itemsize * 8
+    return _strip_width(int(np.prod(val.shape) or 1) *
+                        jnp.dtype(val.dtype).itemsize * 8)
 
 
 def _vst1_cost(buf, offset, val, *_, **__):
@@ -589,7 +602,7 @@ def vst1(buf, offset, val):
 # charge — predication is architecturally free on RVV.
 
 def _vld1m_width(buf, offset, lanes, cnt, fill=0, *_, **__):
-    return int(lanes) * jnp.dtype(buf.dtype).itemsize * 8
+    return _strip_width(int(lanes) * jnp.dtype(buf.dtype).itemsize * 8)
 
 
 def _vld1m_cost(buf, offset, lanes, cnt, fill=0, *_, **__):
@@ -623,7 +636,8 @@ def vld1m(buf, offset, lanes, cnt, fill=0):
 
 
 def _vst1m_width(buf, offset, val, cnt, *_, **__):
-    return int(np.prod(val.shape) or 1) * jnp.dtype(val.dtype).itemsize * 8
+    return _strip_width(int(np.prod(val.shape) or 1) *
+                        jnp.dtype(val.dtype).itemsize * 8)
 
 
 def _vst1m_cost(buf, offset, val, cnt, *_, **__):
@@ -657,8 +671,8 @@ def vst1m(buf, offset, val, cnt):
 # register.  On RVV this is a register-group move/slide sequence.
 
 def _vtile_width(a, reps, *_, **__):
-    return int(np.prod(a.shape) or 1) * int(reps) * \
-        jnp.dtype(a.dtype).itemsize * 8
+    return _strip_width(int(np.prod(a.shape) or 1) * int(reps) *
+                        jnp.dtype(a.dtype).itemsize * 8)
 
 
 def _vtile_cost(a, reps, *_, **__):
@@ -753,6 +767,303 @@ def _vreinterpret(a, dtype):
 
 def vreinterpret(a, dtype):
     return dispatch("vreinterpret", a, dtype)
+
+
+# -- widening arithmetic (vmull/vaddl/vsubl -> RVV vwmul/vwadd/vwsub) --------
+#
+# NEON's width-changing families are where the paper's customized
+# conversions matter most (Table 2): the generic-union route converts
+# both operands up and operates at the wide width (3 wide ops), while
+# RVV has single widening instructions that read narrow groups and
+# write one double-width group.  Ops take the *output* dtype explicitly
+# (like vcvt) — the logical register model has no implicit promotion.
+
+def _wide_out_width(a, b, dtype, *_, **__):
+    # result register: same element count at 2x width
+    n = int(np.prod(a.shape) or 1)
+    return _strip_width(n * jnp.dtype(dtype).itemsize * 8)
+
+
+def _wide_out_cost(ops_per_vec):
+    def cost(a, b, dtype, *_, **__):
+        from .trace import vinstrs_for
+        return ops_per_vec * vinstrs_for(int(np.prod(a.shape) or 1),
+                                         dtype)
+    return cost
+
+
+def _widening(op_name, jnp_fn, doc):
+    @register(op_name, "generic",
+              cost=lambda a, b, dtype, *_, **__:
+              int(np.prod(a.shape) or 1),
+              doc="per-element widen-and-op loop")
+    def _g(a, b, dtype):
+        f = jax.vmap(lambda x, y: jnp_fn(x.astype(dtype),
+                                         y.astype(dtype)))
+        return f(jnp.ravel(a), jnp.ravel(b)).reshape(a.shape)
+
+    # the non-customized conversion: two widening converts + a wide op
+    @register(op_name, "vector", cost=_wide_out_cost(3),
+              width=_wide_out_width, doc="cvt + cvt + wide op")
+    def _v(a, b, dtype):
+        return jnp_fn(a.astype(dtype), b.astype(dtype))
+
+    # customized conversion: one widening instruction (vwmul/vwadd/
+    # vwsub) retiring only the double-width destination group's micro-ops
+    @register(op_name, "pallas", cost=_wide_out_cost(1),
+              width=_wide_out_width, doc=doc)
+    def _c(a, b, dtype):
+        return jnp_fn(a.astype(dtype), b.astype(dtype))
+
+    def api(a, b, dtype):
+        return dispatch(op_name, a, b, dtype)
+
+    api.__name__ = op_name
+    return api
+
+
+vmull = _widening("vmull", jnp.multiply,
+                  "single widening multiply (vwmul.vv)")
+vaddl = _widening("vaddl", jnp.add, "single widening add (vwadd.vv)")
+vsubl = _widening("vsubl", jnp.subtract, "single widening sub (vwsub.vv)")
+
+
+def _cvt_out_width(a, dtype, *_, **__):
+    # width rule sees the wider of source and destination registers
+    n = int(np.prod(a.shape) or 1)
+    bits = n * max(jnp.dtype(a.dtype).itemsize,
+                   jnp.dtype(dtype).itemsize) * 8
+    return _strip_width(bits)
+
+
+def _cvt_out_cost(ops_per_vec):
+    def cost(a, dtype, *_, **__):
+        from .trace import vinstrs_for
+        n = int(np.prod(a.shape) or 1)
+        wide = a.dtype if jnp.dtype(a.dtype).itemsize >= \
+            jnp.dtype(dtype).itemsize else jnp.dtype(dtype)
+        return ops_per_vec * vinstrs_for(n, wide)
+    return cost
+
+
+@register("vmovl", "vector", cost=_cvt_out_cost(1), width=_cvt_out_width,
+          doc="widening move (vsext/vzext.vf2)")
+@register("vmovl", "generic", cost=scalar_cost(1))
+def _vmovl(a, dtype):
+    return a.astype(dtype)
+
+
+def vmovl(a, dtype):
+    return dispatch("vmovl", a, dtype)
+
+
+def _wrap_narrow(a, dtype):
+    """Truncating narrow (vmovn semantics: keep the low half bits)."""
+    dst = jnp.dtype(dtype)
+    src_u = jnp.dtype(f"uint{jnp.dtype(a.dtype).itemsize * 8}")
+    dst_u = jnp.dtype(f"uint{dst.itemsize * 8}")
+    x = a if a.dtype == src_u else jax.lax.bitcast_convert_type(a, src_u)
+    x = (x & src_u.type(2 ** (dst_u.itemsize * 8) - 1)).astype(dst_u)
+    return x if dst == dst_u else jax.lax.bitcast_convert_type(x, dst)
+
+
+@register("vmovn", "pallas", cost=_cvt_out_cost(1), width=_cvt_out_width,
+          doc="single narrowing move (vncvt)")
+@register("vmovn", "vector", cost=_cvt_out_cost(2), width=_cvt_out_width,
+          doc="mask + convert at the wide width")
+def _vmovn_v(a, dtype):
+    return _wrap_narrow(a, dtype)
+
+
+@register("vmovn", "generic", cost=scalar_cost(1))
+def _vmovn_g(a, dtype):
+    return jax.vmap(lambda x: _wrap_narrow(x, dtype))(
+        jnp.ravel(a)).reshape(a.shape)
+
+
+def vmovn(a, dtype):
+    return dispatch("vmovn", a, dtype)
+
+
+def _sat_narrow(a, dtype):
+    dst = jnp.dtype(dtype)
+    info = jnp.iinfo(dst)
+    return jnp.clip(a, info.min, info.max).astype(dst)
+
+
+def _sat_narrowing(op_name, doc):
+    @register(op_name, "generic", cost=scalar_cost(3),
+              doc="per-element clamp-and-narrow loop")
+    def _g(a, dtype):
+        return jax.vmap(lambda x: _sat_narrow(x, dtype))(
+            jnp.ravel(a)).reshape(a.shape)
+
+    @register(op_name, "vector", cost=_cvt_out_cost(3),
+              width=_cvt_out_width, doc="min + max + convert (wide)")
+    def _v(a, dtype):
+        return _sat_narrow(a, dtype)
+
+    # RVV narrows with saturation in one instruction
+    @register(op_name, "pallas", cost=_cvt_out_cost(1),
+              width=_cvt_out_width, doc=doc)
+    def _c(a, dtype):
+        return _sat_narrow(a, dtype)
+
+    def api(a, dtype):
+        return dispatch(op_name, a, dtype)
+
+    api.__name__ = op_name
+    return api
+
+
+vqmovn = _sat_narrowing("vqmovn", "single saturating narrow (vnclip)")
+vqmovun = _sat_narrowing("vqmovun",
+                         "single saturating narrow to unsigned (vnclipu)")
+
+
+# -- struct loads/stores (vld2/vst2 -> RVV segment loads) --------------------
+#
+# ``vld2`` reads 2*lanes contiguous elements and de-interleaves them
+# into a 2-register tuple (even lanes, odd lanes); ``vst2`` is the
+# inverse.  RVV's segment instructions (vlseg2e/vsseg2e) do the whole
+# group in one instruction; without them the vector tier needs two
+# strided accesses per struct.  Pointers follow the vld1 convention:
+# (buffer, element offset), stores return the updated buffer.
+
+def _vld2_width(buf, offset, lanes, *_, **__):
+    # per-register width: the struct occupies two registers, each of
+    # which must map (vld2q_f32 is native on rvv-128)
+    return _strip_width(int(lanes) * jnp.dtype(buf.dtype).itemsize * 8)
+
+
+def _vld2_seg_cost(buf, offset, lanes, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(2 * int(lanes), buf.dtype)
+
+
+def _vld2_strided_cost(buf, offset, lanes, *_, **__):
+    from .trace import vinstrs_for
+    return 2 * vinstrs_for(int(lanes), buf.dtype) + 2
+
+
+@register("vld2", "pallas", cost=_vld2_seg_cost, width=_vld2_width,
+          doc="one segment load (vlseg2e<eew>.v)")
+@register("vld2", "vector", cost=_vld2_strided_cost, width=_vld2_width,
+          doc="two strided loads (vlse<eew>.v)")
+def _vld2_v(buf, offset, lanes):
+    total = 2 * lanes
+    if total > buf.shape[0]:
+        # zero-trip trace safety, as in _vld1_v
+        idx = jnp.clip(offset + jnp.arange(total), 0, buf.shape[0] - 1)
+        x = buf[idx]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(buf, offset, total, axis=0)
+    return x[0::2], x[1::2]
+
+
+@register("vld2", "generic", cost=lambda buf, offset, lanes, *_, **__:
+          2 * int(lanes), doc="per-lane scalar gather loop")
+def _vld2_g(buf, offset, lanes):
+    def at(i):
+        return jax.lax.dynamic_index_in_dim(buf, i, axis=0,
+                                            keepdims=False)
+    lane = jnp.arange(lanes)
+    return (jax.vmap(at)(offset + 2 * lane),
+            jax.vmap(at)(offset + 2 * lane + 1))
+
+
+def vld2(buf, offset, lanes):
+    """De-interleaving struct load: ``(buf[off::2], buf[off+1::2])``
+    limited to ``lanes`` elements each."""
+    return dispatch("vld2", buf, offset, lanes)
+
+
+def _vst2_width(buf, offset, v0, v1, *_, **__):
+    return _strip_width(int(np.prod(v0.shape) or 1) *
+                        jnp.dtype(v0.dtype).itemsize * 8)
+
+
+def _vst2_seg_cost(buf, offset, v0, v1, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(2 * int(np.prod(v0.shape) or 1), v0.dtype)
+
+
+def _vst2_strided_cost(buf, offset, v0, v1, *_, **__):
+    from .trace import vinstrs_for
+    return 2 * vinstrs_for(int(np.prod(v0.shape) or 1), v0.dtype) + 2
+
+
+def _interleave(v0, v1):
+    return jnp.stack([v0, v1], axis=-1).reshape(2 * v0.shape[0])
+
+
+@register("vst2", "pallas", cost=_vst2_seg_cost, width=_vst2_width,
+          doc="one segment store (vsseg2e<eew>.v)")
+@register("vst2", "vector", cost=_vst2_strided_cost, width=_vst2_width,
+          doc="two strided stores (vsse<eew>.v)")
+def _vst2_v(buf, offset, v0, v1):
+    val = _interleave(v0, v1)
+    if val.shape[0] > buf.shape[0]:
+        return buf.at[offset + jnp.arange(val.shape[0])].set(
+            val, mode="drop")
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, offset, axis=0)
+
+
+@register("vst2", "generic", cost=lambda buf, offset, v0, v1, *_, **__:
+          2 * int(np.prod(v0.shape) or 1),
+          doc="per-lane scalar scatter loop")
+def _vst2_g(buf, offset, v0, v1):
+    return _vst2_v(buf, offset, v0, v1)
+
+
+def vst2(buf, offset, v0, v1):
+    """Interleaving struct store; returns the updated buffer."""
+    return dispatch("vst2", buf, offset, v0, v1)
+
+
+# masked (predicated) struct forms — the re-vectorizer's lane-group
+# tail: the first ``cnt`` element *groups* (pairs) are live, exactly
+# vsetvli semantics applied to a segment access.
+
+@register("vld2m", "vector", cost=_vld2_seg_cost, width=_vld2_width,
+          doc="predicated segment load (vsetvli cnt; vlseg2e<eew>.v)")
+def _vld2m_v(buf, offset, lanes, cnt, fill=0):
+    lane = jnp.arange(lanes)
+    i0 = jnp.clip(offset + 2 * lane, 0, buf.shape[0] - 1)
+    i1 = jnp.clip(offset + 2 * lane + 1, 0, buf.shape[0] - 1)
+    f = jnp.asarray(fill, buf.dtype)
+    return (jnp.where(lane < cnt, buf[i0], f),
+            jnp.where(lane < cnt, buf[i1], f))
+
+
+@register("vld2m", "generic", cost=lambda buf, offset, lanes, cnt,
+          fill=0, *_, **__: 2 * int(lanes),
+          doc="per-lane guarded scalar gather loop")
+def _vld2m_g(buf, offset, lanes, cnt, fill=0):
+    return _vld2m_v(buf, offset, lanes, cnt, fill)
+
+
+def vld2m(buf, offset, lanes, cnt, fill=0):
+    """Masked :func:`vld2`: only the first ``cnt`` element pairs are
+    active; inactive lanes read as ``fill`` (never out of bounds)."""
+    return dispatch("vld2m", buf, offset, lanes, cnt, fill)
+
+
+@register("vst2m", "vector", cost=_vst2_seg_cost, width=_vst2_width,
+          doc="predicated segment store (vsetvli cnt; vsseg2e<eew>.v)")
+@register("vst2m", "generic", cost=lambda buf, offset, v0, v1, cnt,
+          *_, **__: 2 * int(np.prod(v0.shape) or 1),
+          doc="per-lane guarded scalar scatter loop")
+def _vst2m(buf, offset, v0, v1, cnt):
+    val = _interleave(v0, v1)
+    pos = jnp.arange(val.shape[0])
+    idx = jnp.where(pos // 2 < cnt, offset + pos, buf.shape[0])
+    return buf.at[idx].set(val, mode="drop")
+
+
+def vst2m(buf, offset, v0, v1, cnt):
+    """Masked :func:`vst2`: stores the first ``cnt`` element pairs."""
+    return dispatch("vst2m", buf, offset, v0, v1, cnt)
 
 
 @register("vtbl", "generic", cost=scalar_cost(2), doc="per-lane table lookup")

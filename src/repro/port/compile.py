@@ -296,6 +296,20 @@ class _Tracer:
             env[ins.result] = vec[lane]
             return
 
+        # register-struct plumbing: free SSA renaming, nothing to trace
+        if kind == "tuple_undef":
+            env[ins.result] = tuple(jnp.zeros((e.lanes,), e.dtype)
+                                    for e in rty.elems)
+            return
+        if kind == "tuple_get":
+            env[ins.result] = env[ins.args[0]][ins.attrs["index"]]
+            return
+        if kind == "tuple_set":
+            t = list(env[ins.args[0]])
+            t[ins.attrs["index"]] = env[ins.args[1]]
+            env[ins.result] = tuple(t)
+            return
+
         if kind == "vv":
             out = self.dispatch(isa_op, *(env[v] for v in ins.args))
         elif kind == "dup":
@@ -344,6 +358,31 @@ class _Tracer:
         elif kind in ("cvt", "reinterpret"):
             out = self.dispatch(isa_op, env[ins.args[0]],
                                 jnp.dtype(rty.dtype))
+        elif kind == "vv_cvt":
+            out = self.dispatch(isa_op, env[ins.args[0]],
+                                env[ins.args[1]], jnp.dtype(rty.dtype))
+        elif kind == "load2":
+            buf, off = env[ins.args[0]]
+            out = self.dispatch(isa_op, self.memory[buf], off, rty.lanes)
+        elif kind == "load2_masked":
+            buf, off = env[ins.args[0]]
+            cnt = env[ins.args[1]]
+            out = self.dispatch(isa_op, self.memory[buf], off, rty.lanes,
+                                cnt, ins.attrs.get("fill", 0))
+        elif kind == "store2":
+            buf, off = env[ins.args[0]]
+            v0, v1 = env[ins.args[1]]
+            out = self.dispatch(isa_op, self.memory[buf], off, v0, v1)
+            self.memory[buf] = out
+            return
+        elif kind == "store2_masked":
+            buf, off = env[ins.args[0]]
+            v0, v1 = env[ins.args[1]]
+            cnt = env[ins.args[2]]
+            out = self.dispatch(isa_op, self.memory[buf], off, v0, v1,
+                                cnt)
+            self.memory[buf] = out
+            return
         else:
             raise CompileError(f"unknown intrinsic kind {kind!r}")
 

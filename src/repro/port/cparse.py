@@ -23,6 +23,7 @@ __all__ = [
     "Scalar", "Ptr", "VecT", "Param", "FuncDef",
     "Block", "Decl", "If", "For", "While", "Return", "ExprStmt", "Assign",
     "Name", "Num", "Call", "Un", "Bin", "Cast", "Index", "Ternary",
+    "Member",
 ]
 
 
@@ -65,7 +66,9 @@ _SCALAR_NAMES = {
     "size_t": "size_t", "void": "void",
 }
 
-_VEC_RE = re.compile(r"^(u?int|float)(8|16|32|64)x(\d+)_t$")
+# plain registers (float32x4_t) and 2-register structs (float32x4x2_t,
+# the vld2/vst2 result type — NEON's only struct types in the subset)
+_VEC_RE = re.compile(r"^(u?int|float)(8|16|32|64)x(\d+)(x2)?_t$")
 
 
 def is_type_name(text: str) -> bool:
@@ -182,6 +185,14 @@ class Cast:
 class Index:
     base: object
     index: object
+
+
+@dataclasses.dataclass
+class Member:
+    """``base.field`` — only ``.val`` on NEON register structs in the
+    subset, always further indexed (``x.val[0]``)."""
+    base: object
+    name: str
 
 
 @dataclasses.dataclass
@@ -466,6 +477,9 @@ class _Parser:
                 idx = self.expression()
                 self.expect("punct", "]")
                 e = Index(base=e, index=idx)
+            elif self.accept("punct", "."):
+                field = self.expect("ident").text
+                e = Member(base=e, name=field)
             elif self.at("punct", "(") and isinstance(e, Name):
                 call_line = self.peek().line
                 self.next()

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.core.registry import REGISTRY
 from .ir import (Block, IfOp, Instr, Loop, PtrType, ScalarType, TFunction,
-                 Value, VecType)
+                 Value, VecTupleType, VecType)
 
 __all__ = ["Machine", "ExecError"]
 
@@ -261,8 +261,30 @@ class Machine:
         width = ins.attrs["width_bits"]
         rty = ins.result.type if ins.result is not None else None
 
-        def abstract_reg(ty: VecType):
+        def abstract_reg(ty):
+            # tuple-aware abstract values: a struct register's unknown is
+            # a tuple of per-register unknowns, not a scalar stand-in —
+            # vld2 in abstract cost-estimation mode must not collapse to
+            # _UNKNOWN_SCALAR (which only models vector-produced scalars)
+            if isinstance(ty, VecTupleType):
+                return tuple(abstract_reg(e) for e in ty.elems)
             return jax.ShapeDtypeStruct((ty.lanes,), ty.dtype)
+
+        # register-struct plumbing: pure SSA renaming, no vector issue,
+        # no dispatch, no cost — a struct *is* its member registers
+        if kind == "tuple_undef":
+            env[ins.result] = tuple(
+                abstract_reg(e) if self.abstract
+                else jnp.zeros((e.lanes,), e.dtype) for e in rty.elems)
+            return
+        if kind == "tuple_get":
+            env[ins.result] = env[ins.args[0]][ins.attrs["index"]]
+            return
+        if kind == "tuple_set":
+            t = list(env[ins.args[0]])
+            t[ins.attrs["index"]] = env[ins.args[1]]
+            env[ins.result] = tuple(t)
+            return
 
         if kind == "get_lane":
             # register -> scalar move: executor-native, one scalar op
@@ -334,12 +356,37 @@ class Machine:
             vec = (abstract_reg(ins.args[0].type) if self.abstract
                    else env[ins.args[0]])
             args = [vec, jnp.dtype(rty.dtype)]
+        elif kind == "vv_cvt":
+            # widening binary: (a, b, out dtype), like cvt with two regs
+            ab = [env[v] if not self.abstract else abstract_reg(v.type)
+                  for v in ins.args]
+            args = ab + [jnp.dtype(rty.dtype)]
+        elif kind == "load2":
+            buf, off = env[ins.args[0]]
+            args = [self.memory[buf], _as_np_index(off), rty.lanes]
+        elif kind == "load2_masked":
+            buf, off = env[ins.args[0]]
+            cnt = env[ins.args[1]]
+            args = [self.memory[buf], _as_np_index(off), rty.lanes,
+                    _as_np_index(cnt), ins.attrs.get("fill", 0)]
+        elif kind == "store2":
+            buf, off = env[ins.args[0]]
+            tup = (abstract_reg(ins.args[1].type) if self.abstract
+                   else env[ins.args[1]])
+            args = [self.memory[buf], _as_np_index(off), tup[0], tup[1]]
+        elif kind == "store2_masked":
+            buf, off = env[ins.args[0]]
+            tup = (abstract_reg(ins.args[1].type) if self.abstract
+                   else env[ins.args[1]])
+            cnt = env[ins.args[2]]
+            args = [self.memory[buf], _as_np_index(off), tup[0], tup[1],
+                    _as_np_index(cnt)]
         else:
             raise ExecError(f"unknown intrinsic kind {kind!r}")
 
         if self.abstract:
             self._charge(name, isa_op, width, *args)
-            if kind in ("store", "store_masked"):
+            if kind in ("store", "store_masked", "store2", "store2_masked"):
                 return
             if kind == "reduce":
                 env[ins.result] = _UnknownScalar(
@@ -349,7 +396,7 @@ class Machine:
             return
 
         out = self._dispatch(isa_op, *args)
-        if kind in ("store", "store_masked"):
+        if kind in ("store", "store_masked", "store2", "store2_masked"):
             buf, _ = env[ins.args[0]]
             self.memory[buf] = out
         elif kind == "reduce":

@@ -24,6 +24,11 @@ The name grammar handled::
     v{addv,maxv,minv}[q]_<elem>   horizontal reductions
     vcvt[q]_<to>_<from>           lane-wise conversion
     vget[q]_lane_<elem>           lane extract to scalar
+    v{mull,addl,subl}_<elem>      widening D x D -> Q arithmetic
+    vmovl_<elem>                  widening move D -> Q
+    v{movn,qmovn,qmovun}_<elem>   narrowing move Q -> D (q* saturate)
+    vld2[q]_<elem>                de-interleaving 2-register struct load
+    vst2[q]_<elem>                interleaving 2-register struct store
 """
 from __future__ import annotations
 
@@ -33,7 +38,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from .ir import IRType, PtrType, ScalarType, VecType
+from .ir import IRType, PtrType, ScalarType, VecTupleType, VecType
 
 __all__ = ["IntrinSpec", "resolve", "UnknownIntrinsic"]
 
@@ -76,6 +81,16 @@ def _ebits(dtype: str) -> int:
 def _vt(dtype: str, q: bool) -> VecType:
     lanes = (128 if q else 64) // _ebits(dtype)
     return VecType(f"{dtype}x{lanes}_t")
+
+
+def _double(dtype: str) -> str:
+    """Element type at 2x the width ('int8' -> 'int16')."""
+    return dtype.rstrip("0123456789") + str(2 * _ebits(dtype))
+
+
+def _half(dtype: str) -> str:
+    """Element type at half the width ('int16' -> 'int8')."""
+    return dtype.rstrip("0123456789") + str(_ebits(dtype) // 2)
 
 
 def resolve(name: str) -> IntrinSpec:
@@ -179,6 +194,61 @@ def _resolve(name: str) -> Optional[IntrinSpec]:  # noqa: C901
         v = _vt(dt, m.group(2) == "q")
         return IntrinSpec(name, _REDUCE[m.group(1)], "reduce", (v,),
                           ScalarType(dt), v.bits)
+
+    # widening arithmetic: v{mull,addl,subl}_<elem> — D x D -> Q at 2x
+    # element width (Table 2's customized RVV conversions: vwmul/vwadd/
+    # vwsub write a double-width register group in one instruction)
+    m = re.match(r"^v(mull|addl|subl)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM and not m.group(2).startswith("f") \
+            and _ebits(_ELEM[m.group(2)]) <= 32:
+        dt = _ELEM[m.group(2)]
+        d, q = _vt(dt, False), _vt(_double(dt), True)
+        return IntrinSpec(name, f"v{m.group(1)}", "vv_cvt", (d, d), q,
+                          q.bits)
+
+    # vmovl_<elem> — widening move D -> Q (vsext/vzext)
+    m = re.match(r"^vmovl_([a-z0-9]+)$", name)
+    if m and m.group(1) in _ELEM and not m.group(1).startswith("f") \
+            and _ebits(_ELEM[m.group(1)]) <= 32:
+        dt = _ELEM[m.group(1)]
+        d, q = _vt(dt, False), _vt(_double(dt), True)
+        return IntrinSpec(name, "vmovl", "cvt", (d,), q, q.bits)
+
+    # narrowing moves: v{movn,qmovn,qmovun}_<elem> — Q -> D at half the
+    # element width (vncvt; the q-forms saturate like RVV vnclip[u]).
+    # The suffix names the *source* type, NEON-style.
+    m = re.match(r"^v(movn|qmovn|qmovun)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM and not m.group(2).startswith("f") \
+            and _ebits(_ELEM[m.group(2)]) >= 16:
+        dt = _ELEM[m.group(2)]
+        if m.group(1) == "qmovun":
+            if dt.startswith("u"):
+                return None          # vqmovun narrows *signed* sources
+            out = "u" + _half(dt)
+        else:
+            out = _half(dt)
+        q, d = _vt(dt, True), _vt(out, False)
+        return IntrinSpec(name, f"v{m.group(1)}", "cvt", (q,), d, q.bits)
+
+    # vld2[q] — de-interleaving struct load (RVV vlseg2e<eew>).  The
+    # Table-2 width is *per register*: the struct occupies two
+    # registers, each of which must map (vld2q is native on rvv-128).
+    m = re.match(r"^vld2(q?)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        t = VecTupleType((v, v))
+        return IntrinSpec(name, "vld2", "load2", (PtrType(dt),), t,
+                          v.bits)
+
+    # vst2[q] — interleaving struct store (RVV vsseg2e<eew>)
+    m = re.match(r"^vst2(q?)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM:
+        dt = _ELEM[m.group(2)]
+        v = _vt(dt, m.group(1) == "q")
+        t = VecTupleType((v, v))
+        return IntrinSpec(name, "vst2", "store2", (PtrType(dt), t),
+                          None, v.bits)
 
     # vbsl[q] — mask select: (umask, a, b)
     m = re.match(r"^vbsl(q?)_([a-z0-9]+)$", name)

@@ -27,6 +27,7 @@ Instruction set:
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax.numpy as jnp
@@ -34,7 +35,8 @@ import jax.numpy as jnp
 from repro.core.vtypes import LVec, NEON_TYPES, neon_lvec
 
 __all__ = [
-    "VecType", "ScalarType", "PtrType", "IRType", "vec_type",
+    "VecType", "VecTupleType", "ScalarType", "PtrType", "IRType",
+    "vec_type", "vec_tuple_type", "is_vec_tuple_name",
     "Value", "Instr", "Loop", "IfOp", "Block", "TFunction",
 ]
 
@@ -98,6 +100,52 @@ class VecType:
 
 
 @dataclasses.dataclass(frozen=True)
+class VecTupleType:
+    """A multi-register value: NEON's ``<elem>x<lanes>x2_t`` structs, as
+    returned by the de-interleaving struct loads (``vld2``) and consumed
+    by the interleaving stores (``vst2``).  The tuple is *not* one wide
+    register — each element is its own logical register, and the
+    re-vectorizer widens them per element group (every register of the
+    tuple carries the same lane count, so one widening factor applies
+    to all of them)."""
+    elems: Tuple[VecType, ...]
+
+    @property
+    def lanes(self) -> int:
+        """Lanes *per element register* (uniform across the tuple)."""
+        return self.elems[0].lanes
+
+    @property
+    def dtype(self):
+        return self.elems[0].dtype
+
+    @property
+    def bits(self) -> int:
+        """Total bits across the registers the tuple occupies — its
+        register-file footprint.  NOT the Table-2 substitution width:
+        each member register maps individually (a vld2q of f32 is two
+        Q registers, native wherever one Q register is), so
+        ``intrinsics.resolve`` reports the per-register ``elems[0]
+        .bits`` for the ``vlen >= width`` rule."""
+        return sum(e.bits for e in self.elems)
+
+    @property
+    def is_neon(self) -> bool:
+        return all(e.is_neon for e in self.elems)
+
+    def widened(self, factor: int) -> "VecTupleType":
+        if factor == 1:
+            return self
+        return VecTupleType(tuple(e.widened(factor) for e in self.elems))
+
+    def __str__(self):
+        e = self.elems[0]
+        if e.is_neon:
+            return e.name[:-2] + f"x{len(self.elems)}_t"
+        return f"({', '.join(str(x) for x in self.elems)})"
+
+
+@dataclasses.dataclass(frozen=True)
 class ScalarType:
     dtype: str                     # 'float32', 'int64', 'bool', ...
 
@@ -115,13 +163,33 @@ class PtrType:
         return f"{c}{self.elem}*"
 
 
-IRType = Union[VecType, ScalarType, PtrType]
+IRType = Union[VecType, VecTupleType, ScalarType, PtrType]
 
 
 def vec_type(name: str) -> VecType:
     if name not in NEON_TYPES:
         raise KeyError(f"not a Table-2 NEON register type: {name!r}")
     return VecType(name)
+
+
+_TUPLE_RE = re.compile(r"^([a-z0-9]+x\d+)x(\d+)_t$")
+
+
+def is_vec_tuple_name(name: str) -> bool:
+    m = _TUPLE_RE.match(name)
+    return bool(m) and f"{m.group(1)}_t" in NEON_TYPES and \
+        m.group(2) == "2"
+
+
+def vec_tuple_type(name: str) -> VecTupleType:
+    """'float32x4x2_t' -> VecTupleType of two float32x4_t registers."""
+    m = _TUPLE_RE.match(name)
+    if not m or f"{m.group(1)}_t" not in NEON_TYPES:
+        raise KeyError(f"not a NEON multi-register struct type: {name!r}")
+    if m.group(2) != "2":
+        raise KeyError(f"{name!r}: only 2-tuple register structs are in "
+                       f"the subset (vld2/vst2)")
+    return VecTupleType((VecType(f"{m.group(1)}_t"),) * 2)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,8 @@ from typing import Dict, List, Optional, Set, Tuple
 from . import cparse as C
 from .intrinsics import IntrinSpec, UnknownIntrinsic, resolve
 from .ir import (Block, IfOp, Instr, IRType, Loop, PtrType, ScalarType,
-                 TFunction, Value, VecType, vec_type)
+                 TFunction, Value, VecTupleType, VecType,
+                 is_vec_tuple_name, vec_tuple_type, vec_type)
 
 __all__ = ["lower_function", "LowerError"]
 
@@ -40,6 +41,8 @@ def _ctype_to_ir(t, where: str) -> IRType:
     if isinstance(t, C.Ptr):
         return PtrType(elem=t.elem.name, const=t.const)
     if isinstance(t, C.VecT):
+        if is_vec_tuple_name(t.name):
+            return vec_tuple_type(t.name)
         try:
             return vec_type(t.name)
         except KeyError:
@@ -106,8 +109,18 @@ class _Lowerer:
         elif isinstance(s, C.Decl):
             ty = _ctype_to_ir(s.type, f"decl {s.name!r}")
             if s.init is None:
-                v = self.const(0, env) if isinstance(ty, ScalarType) else None
-                if v is None:
+                if isinstance(ty, ScalarType):
+                    v = self.const(0, env)
+                elif isinstance(ty, VecTupleType):
+                    # `float32x4x2_t vo;` then per-member assignment —
+                    # the NEON idiom for assembling a vst2 operand.  The
+                    # undef is pure register naming (no issue, no cost).
+                    v = self.emit(Instr(
+                        "intrin", (), self.val(ty, hint=s.name),
+                        attrs={"intrinsic": "tuple.undef",
+                               "isa_op": "tuple_undef",
+                               "kind": "tuple_undef", "width_bits": 0}))
+                else:
                     raise LowerError(f"vector local {s.name!r} needs an "
                                      f"initializer")
             else:
@@ -151,6 +164,10 @@ class _Lowerer:
                 raise LowerError(
                     f"decl {name!r}: declared {ty} but initializer has "
                     f"type {v.type}")
+        if isinstance(ty, VecTupleType) and v.type != ty:
+            raise LowerError(
+                f"decl {name!r}: declared {ty} but initializer has "
+                f"type {v.type}")
         if isinstance(ty, PtrType) and not isinstance(v.type, PtrType):
             raise LowerError(f"decl {name!r}: pointer initializer expected")
 
@@ -168,10 +185,16 @@ class _Lowerer:
                      rhs.type.name != cur.type.name):
                 raise LowerError(f"{t.id!r}: register type changes from "
                                  f"{cur.type} to {rhs.type}")
+            if isinstance(cur.type, VecTupleType) and \
+                    rhs.type != cur.type:
+                raise LowerError(f"{t.id!r}: register struct type changes "
+                                 f"from {cur.type} to {rhs.type}")
             env[t.id] = rhs
         elif isinstance(t, C.Un) and t.op == "*":
             ptr = self.expr(t.expr, env)
             self.store_scalar(ptr, s, env)
+        elif isinstance(t, C.Index) and isinstance(t.base, C.Member):
+            self.member_assign(t, s, env)
         elif isinstance(t, C.Index):
             base = self.expr(t.base, env)
             idx = self.expr(t.index, env)
@@ -180,6 +203,46 @@ class _Lowerer:
         else:
             raise LowerError(f"unsupported assignment target "
                              f"{type(t).__name__}")
+
+    def member_assign(self, t: C.Index, s: C.Assign, env):
+        """``x.val[k] = reg`` — functional update of a register struct
+        (SSA: a fresh tuple value rebinds the variable)."""
+        mem = t.base
+        if not isinstance(mem.base, C.Name):
+            raise LowerError("struct member assignment must target a "
+                             "named register struct")
+        cur = env.get(mem.base.id)
+        if cur is None:
+            raise LowerError(f"assignment to undeclared {mem.base.id!r}")
+        k = self._member_index(mem, t.index, cur)
+        if s.op != "":
+            raise LowerError(f"{mem.base.id!r}.val[{k}]: compound "
+                             f"assignment on struct members is out of "
+                             f"the subset")
+        val = self.expr(s.value, env)
+        want = cur.type.elems[k]
+        if not isinstance(val.type, VecType) or val.type != want:
+            raise LowerError(f"{mem.base.id!r}.val[{k}]: expected {want}, "
+                             f"got {val.type}")
+        out = self.emit(Instr(
+            "intrin", (cur, val), self.val(cur.type, hint=mem.base.id),
+            attrs={"intrinsic": "tuple.set", "isa_op": "tuple_set",
+                   "kind": "tuple_set", "index": k, "width_bits": 0}))
+        env[mem.base.id] = out
+
+    def _member_index(self, mem: "C.Member", index, cur: Value) -> int:
+        if mem.name != "val":
+            raise LowerError(f"unknown struct member .{mem.name} (NEON "
+                             f"register structs expose only .val)")
+        if not isinstance(cur.type, VecTupleType):
+            raise LowerError(f".val on non-struct value of type "
+                             f"{cur.type}")
+        if not isinstance(index, C.Num) or not isinstance(index.value, int):
+            raise LowerError(".val[] index must be an integer literal")
+        k = index.value
+        if not 0 <= k < len(cur.type.elems):
+            raise LowerError(f".val[{k}] out of range for {cur.type}")
+        return k
 
     def store_scalar(self, ptr: Value, s: C.Assign, env):
         if not isinstance(ptr.type, PtrType):
@@ -285,6 +348,16 @@ class _Lowerer:
                               self.expr(e.rhs, env))
         if isinstance(e, C.Cast):
             return self.cast(e, env)
+        if isinstance(e, C.Index) and isinstance(e.base, C.Member):
+            tup = self.expr(e.base.base, env)
+            k = self._member_index(e.base, e.index, tup)
+            return self.emit(Instr(
+                "intrin", (tup,), self.val(tup.type.elems[k]),
+                attrs={"intrinsic": "tuple.get", "isa_op": "tuple_get",
+                       "kind": "tuple_get", "index": k, "width_bits": 0}))
+        if isinstance(e, C.Member):
+            raise LowerError(f".{e.name}: struct members are registers — "
+                             f"index them (.val[0] / .val[1])")
         if isinstance(e, C.Index):
             base = self.expr(e.base, env)
             ptr = self.ptradd(base, self.expr(e.index, env))
@@ -402,6 +475,10 @@ class _Lowerer:
             if not isinstance(v.type, ScalarType):
                 raise LowerError(f"{label}: immediate expected")
             return
+        if isinstance(want, VecTupleType):
+            if v.type != want:
+                raise LowerError(f"{label}: expected {want}, got {v.type}")
+            return
         if isinstance(want, VecType):
             if not isinstance(v.type, VecType) or v.type.name != want.name:
                 raise LowerError(f"{label}: expected {want}, got {v.type}")
@@ -439,6 +516,11 @@ def _assigned_names(stmts) -> List[str]:
         elif isinstance(s, C.Assign):
             if isinstance(s.target, C.Name):
                 note(s.target.id)
+            elif isinstance(s.target, C.Index) and \
+                    isinstance(s.target.base, C.Member) and \
+                    isinstance(s.target.base.base, C.Name):
+                # x.val[k] = ... rebinds x (functional tuple update)
+                note(s.target.base.base.id)
         elif isinstance(s, C.Block):
             for n in _assigned_names(s.stmts):
                 note(n)

@@ -51,13 +51,20 @@ import numpy as np
 
 from repro.core import targets as _targets
 from .ir import (Block, IfOp, Instr, Loop, PtrType, ScalarType, TFunction,
-                 Value, VecType)
+                 Value, VecTupleType, VecType)
 
 __all__ = ["retile", "RetileResult", "strip_loops", "StripInfo"]
 
 
 # intrinsic isa ops whose semantics are unchanged by widening the
-# register (lane-wise, or local to a fixed sub-group of lanes)
+# register (lane-wise, or local to a fixed sub-group of lanes).  The
+# width-changing families (vmull/vaddl/vsubl, vmovl, vmovn/vqmovn/
+# vqmovun) and the struct accesses (vld2/vst2, tuple plumbing) are
+# lane-GROUP-wise: element i of every result depends only on element
+# group i of the inputs, so widening the whole group re-tiles them —
+# the wide side of a vmull simply tracks the narrow side at 2x element
+# width, and a vld2 de-interleaves a 2x-longer contiguous run.  See
+# DESIGN.md §10 for the element-group legality argument.
 _SCALABLE = {
     "vadd", "vsub", "vmul", "vmax", "vmin", "vand", "vorr", "veor",
     "vqadd", "vqsub", "vmla", "vmls", "vfma", "vabs", "vneg",
@@ -65,6 +72,8 @@ _SCALABLE = {
     "vceq", "vcgt", "vcge", "vclt", "vcle", "vbsl",
     "vdup", "vld1", "vst1", "vcvt", "vshl_n", "vshr_n",
     "vrbit", "vrev64", "vreinterpret",
+    "vmull", "vaddl", "vsubl", "vmovl", "vmovn", "vqmovn", "vqmovun",
+    "vld2", "vst2", "tuple_get", "tuple_set", "tuple_undef",
 }
 # post-loop reduction consumers a widened accumulator may flow into
 _REDUCERS = {"vaddv", "vmaxv", "vminv"}
@@ -360,24 +369,38 @@ class _Retiler:
     # -- strip re-tiling ---------------------------------------------------
     def retile_strip(self, strip: StripInfo, dst: Block) -> bool:
         loop = strip.loop
-        # uniform widening factor: the tightest register in the body
+        # lane-group-aware widening factor: fill the register group with
+        # the *narrowest* register in the body (the one with the most
+        # width headroom).  In a uniform-width body this is the old
+        # tightest-register rule; in a width-changing body (vmull,
+        # vqmovn) the narrow side re-tiles to VLEN x LMUL and the wide
+        # side tracks the same element groups at 2x element width,
+        # spilling into a double register group exactly like RVV's
+        # widening ops write 2xLMUL destinations (the cost models charge
+        # the extra register micro-ops, so the estimate stays honest).
         factor = None
         for ty in _body_vec_types(loop):
             f = self.tgt.retile_factor(ty.lanes, ty.dtype)
-            factor = f if factor is None else min(factor, f)
+            factor = f if factor is None else max(factor, f)
         if not factor or factor <= 1:
             self.notes.append(
                 f"strip at {strip.step} elems/iter: no width headroom "
                 f"on {self.tgt.name}")
+            return False
+        if any(isinstance(v.type, VecTupleType)
+               for v in _outer_vec_uses(loop)):
+            self.notes.append(
+                "loop-invariant register struct used in the body cannot "
+                "be tiled; kept narrow")
             return False
         if not self.check_memory_sites(strip):
             return False
         if not self.check_accumulators(strip):
             return False
 
-        fills = self.plan_masked_tail(strip)
+        plan = self.plan_masked_tail(strip)
         tail_exists = _tail_consumes(self.fn, strip)
-        if fills is None and strip.vec_phis and not tail_exists:
+        if plan is None and strip.vec_phis and not tail_exists:
             self.notes.append(
                 "accumulator strip without masked tail or scalar tail "
                 "cannot cover the remainder; kept narrow")
@@ -389,12 +412,12 @@ class _Retiler:
         tile_map: Dict[int, Value] = {}
         new_loop, result_map = self.widen_loop(strip, factor, dst,
                                                tile_map)
-        if fills is not None:
+        if plan is not None:
             # masked predicated tail subsumes remainder (+ scalar tail)
             self.vmap = dict(saved)
             self.vmap.update(tile_map)
             result_map = self.emit_masked_tail(
-                strip, new_loop, factor, fills, tail_exists, dst,
+                strip, new_loop, factor, plan, tail_exists, dst,
                 result_map)
             self.masked += 1
         elif not strip.vec_phis:
@@ -440,7 +463,8 @@ class _Retiler:
             if ins.op != "intrin":
                 continue
             kind = ins.attrs["kind"]
-            if kind not in ("load", "store", "load_dup"):
+            if kind not in ("load", "store", "load_dup", "load2",
+                            "store2"):
                 continue
             name = ins.attrs["intrinsic"]
             ptr = ins.args[0]
@@ -456,19 +480,30 @@ class _Retiler:
                         f"the buffer; kept narrow")
                     return False
                 continue
-            lanes = (ins.result.type.lanes if kind == "load"
-                     else ins.args[1].type.lanes)
+            # elements the site consumes per iteration: its lane count,
+            # times the interleave degree for struct accesses (a vld2
+            # of L-lane registers reads one contiguous run of 2L
+            # elements and de-interleaves — the *element group* the
+            # lane-group rule tracks)
+            if kind == "load":
+                consumed = ins.result.type.lanes
+            elif kind == "store":
+                consumed = ins.args[1].type.lanes
+            elif kind == "load2":
+                consumed = 2 * ins.result.type.lanes
+            else:                                # store2
+                consumed = 2 * ins.args[1].type.lanes
             if not isinstance(a, Affine) or root_step is None:
                 self.notes.append(
                     f"{name}: memory access is not rooted at a "
                     f"strip-walking pointer; kept narrow")
                 return False
-            if a.off != 0 or root_step != lanes:
+            if a.off != 0 or root_step != consumed:
                 self.notes.append(
-                    f"{name}: access at offset {a.off} with "
-                    f"{lanes} lanes against a {root_step}-element walk "
-                    f"does not tile contiguously (unrolled strip?); "
-                    f"kept narrow")
+                    f"{name}: access at offset {a.off} consuming "
+                    f"{consumed} elems against a {root_step}-element "
+                    f"walk does not tile contiguously (unrolled "
+                    f"strip?); kept narrow")
                 return False
         return True
 
@@ -503,16 +538,31 @@ class _Retiler:
             float(c.attrs["value"]) == 0.0
 
     # -- masked-tail legality ----------------------------------------------
-    def plan_masked_tail(self, strip: StripInfo) -> Optional[Dict[int, object]]:
+    def plan_masked_tail(self, strip: StripInfo):
         """Decide whether one predicated strip iteration can subsume the
-        remainder.  Returns {id(load instr): fill value} or None."""
-        # one active count drives every site: each pointer must advance
-        # exactly one element per counter element
+        remainder.  Returns ({id(load instr): fill value}, site scales —
+        see :meth:`_site_scales`) or None."""
+        # the remaining count is in *counter* elements; each pointer may
+        # advance an integer multiple of it per iteration (a cmul strip
+        # counting complex pairs walks its float buffers 2 elems/pair),
+        # so every site's active count is cnt scaled by its pointer's
+        # per-counter-element stride — see _site_scales
         for p, d in strip.ptr_steps.items():
-            if d != strip.step:
+            if d <= 0 or d % strip.step != 0:
                 self.notes.append(
                     f"pointer {p.hint!r} advances {d}/iter against a "
                     f"{strip.step}-element counter; masked tail off")
+                return None
+        # struct sites de-interleave pairs: their per-register active
+        # count is (cnt * scale) / 2, which must be exact for every
+        # possible remainder — provable only when the scale is even
+        site_scales = self._site_scales(strip)
+        for ins, (scale, div) in site_scales.items():
+            if scale % div != 0:
+                self.notes.append(
+                    f"{ins.attrs['intrinsic']}: {div}-way interleaved "
+                    f"site at {scale} elems per counter element has no "
+                    f"whole-lane active count; masked tail off")
                 return None
         # dataflow over the body: masked-off load lanes must stay
         # neutral through every accumulator update (zero through
@@ -535,6 +585,13 @@ class _Retiler:
                 loads[rid] = ins
                 fills[id(ins)] = 0
                 zeroish[rid] = True
+                continue
+            if kind == "load2":
+                # struct loads zero-fill; their tuple results are not
+                # tracked through the accumulator dataflow (a strip
+                # folding vld2 lanes into a carried accumulator falls
+                # back to the narrow epilogue)
+                fills[id(ins)] = 0
                 continue
             if rid is None:                    # store: lanes masked off
                 continue
@@ -580,7 +637,32 @@ class _Retiler:
                     f"accumulator {phi.hint!r}: masked-off tail lanes "
                     f"are not provably neutral; masked tail off")
                 return None
-        return fills
+        return fills, site_scales
+
+    def _site_scales(self, strip: StripInfo) -> Dict[Instr, tuple]:
+        """Per memory site, (scale, div): the site's pointer advances
+        ``scale`` elements per counter element, and the site packs
+        ``div`` consecutive elements into each register lane (1 for
+        unit-stride vld1/vst1, 2 for de-interleaving vld2/vst2).  A
+        masked site's per-register active count is cnt * scale / div."""
+        syms: Dict[Value, object] = {p: Affine(p, 0)
+                                     for p in strip.loop.phis}
+        _sym_eval(strip.loop.body, syms)
+        out: Dict[Instr, tuple] = {}
+        for ins in strip.loop.body.instrs:
+            if ins.op != "intrin":
+                continue
+            kind = ins.attrs["kind"]
+            if kind not in ("load", "store", "load2", "store2"):
+                continue
+            a = syms.get(ins.args[0], Affine(ins.args[0], 0))
+            d = (strip.ptr_steps.get(a.root)
+                 if isinstance(a, Affine) else None)
+            if d is None:
+                continue           # unreachable after check_memory_sites
+            out[ins] = (d // strip.step,
+                        2 if kind in ("load2", "store2") else 1)
+        return out
 
     # -- widened main loop -------------------------------------------------
     def widen_loop(self, strip: StripInfo, factor: int, dst: Block,
@@ -674,7 +756,8 @@ class _Retiler:
             attrs.update(override)
         if res is not None:
             nty = (res.type.widened(factor)
-                   if isinstance(res.type, VecType) else res.type)
+                   if isinstance(res.type, (VecType, VecTupleType))
+                   else res.type)
             nr = self.val(nty, res.hint)
             self.vmap[id(res)] = nr
             res = nr
@@ -682,8 +765,8 @@ class _Retiler:
 
     # -- predicated tail ----------------------------------------------------
     def emit_masked_tail(self, strip: StripInfo, new_loop: Loop,
-                         factor: int, fills: Dict[int, object],
-                         tail_exists: bool, dst: Block,
+                         factor: int, plan, tail_exists: bool,
+                         dst: Block,
                          result_map: Dict[int, Value]) -> Dict[int, Value]:
         """One masked strip iteration over the remaining elements, then
         fold the consumed count out of the counter/pointers so any
@@ -708,6 +791,28 @@ class _Retiler:
             dst.instrs.append(Instr("sbin", (n_res, rem), cnt,
                                     attrs={"op": "-"}))
 
+        # per-site active counts: a site whose pointer walks ``scale``
+        # elements per counter element (and packs ``div`` of them per
+        # lane) is live for cnt * scale / div lanes.  mult == 1 reuses
+        # cnt directly, so unit-stride kernels emit no extra scalars.
+        fills, site_scales = plan
+        cnt_cache: Dict[int, Value] = {1: cnt}
+
+        def scaled_cnt(mult: int) -> Value:
+            if mult not in cnt_cache:
+                m = self.val(cty, "m")
+                dst.instrs.append(Instr("const", (), m,
+                                        attrs={"value": mult}))
+                v = self.val(cty, "cnt.scaled")
+                dst.instrs.append(Instr("sbin", (cnt, m), v,
+                                        attrs={"op": "*"}))
+                cnt_cache[mult] = v
+            return cnt_cache[mult]
+
+        def site_cnt(ins: Instr) -> Value:
+            s, d = site_scales.get(ins, (1, 1))
+            return scaled_cnt(s // d)
+
         # bind phis to the widened loop's results and copy the body,
         # loads/stores becoming their predicated forms
         for p, r in zip(loop.phis, new_loop.results):
@@ -727,20 +832,31 @@ class _Retiler:
                         "kind": "load_masked", "isa_op": "vld1m",
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]",
                         "fill": fills.get(id(ins), 0)})
-                    out.args = (out.args[0], cnt)
+                    out.args = (out.args[0], site_cnt(ins))
                 elif kind == "store":
                     out = self.widen_intrin(ins, factor, override={
                         "kind": "store_masked", "isa_op": "vst1m",
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]"})
-                    out.args = (out.args[0], out.args[1], cnt)
+                    out.args = (out.args[0], out.args[1], site_cnt(ins))
+                elif kind == "load2":
+                    out = self.widen_intrin(ins, factor, override={
+                        "kind": "load2_masked", "isa_op": "vld2m",
+                        "intrinsic": ins.attrs["intrinsic"] + "[masked]",
+                        "fill": fills.get(id(ins), 0)})
+                    out.args = (out.args[0], site_cnt(ins))
+                elif kind == "store2":
+                    out = self.widen_intrin(ins, factor, override={
+                        "kind": "store2_masked", "isa_op": "vst2m",
+                        "intrinsic": ins.attrs["intrinsic"] + "[masked]"})
+                    out.args = (out.args[0], out.args[1], site_cnt(ins))
                 else:
                     out = self.widen_intrin(ins, factor)
                 dst.instrs.append(out)
             else:
                 dst.instrs.append(self.remap_plain(ins))
 
-        # downstream: counter loses cnt, pointers advance cnt elements,
-        # accumulators become their tail-updated values
+        # downstream: counter loses cnt, pointers advance their scaled
+        # counts, accumulators become their tail-updated values
         final: Dict[int, Value] = dict(result_map)
         left = self.val(strip.counter.type, "n.left")
         dst.instrs.append(Instr("sbin", (n_res, cnt), left,
@@ -750,14 +866,17 @@ class _Retiler:
                 final[id(old_r)] = left
             elif isinstance(p.type, PtrType):
                 adv = self.val(p.type, p.hint)
-                dst.instrs.append(Instr("ptradd",
-                                        (self.look(old_r), cnt), adv))
+                pd = strip.ptr_steps.get(p, strip.step)
+                dst.instrs.append(Instr(
+                    "ptradd",
+                    (self.look(old_r), scaled_cnt(pd // strip.step)),
+                    adv))
                 final[id(old_r)] = adv
             elif p in strip.vec_phis:
                 y = loop.yields[idx[id(p)]]
                 final[id(old_r)] = self.look(y)
         self.notes.append("remainder subsumed by one predicated strip "
-                          "(vld1m/vst1m active count)")
+                          "(vld1m/vst1m/vld2m/vst2m active count)")
         return final
 
     # -- narrow epilogue (masked tail not provable) -------------------------
@@ -809,6 +928,10 @@ def _body_vec_types(loop: Loop) -> List[VecType]:
     tys, seen = [], set()
 
     def note(ty):
+        if isinstance(ty, VecTupleType):
+            for e in ty.elems:
+                note(e)
+            return
         if isinstance(ty, VecType) and ty.name not in seen:
             seen.add(ty.name)
             tys.append(ty)
@@ -832,8 +955,8 @@ def _outer_vec_uses(loop: Loop) -> List[Value]:
     out, seen = [], set()
     for ins in loop.body.instrs:
         for a in ins.args:
-            if isinstance(a.type, VecType) and id(a) not in defined \
-                    and id(a) not in seen:
+            if isinstance(a.type, (VecType, VecTupleType)) and \
+                    id(a) not in defined and id(a) not in seen:
                 seen.add(id(a))
                 out.append(a)
     return out

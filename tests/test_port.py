@@ -105,6 +105,64 @@ def test_resolve_unknown():
         intrinsics.resolve("vqrdmulhq_s16")     # saturating: out of subset
 
 
+def test_resolve_widening_narrowing():
+    mull = intrinsics.resolve("vmull_s8")
+    assert mull.isa_op == "vmull" and mull.kind == "vv_cvt"
+    assert all(t.name == "int8x8_t" for t in mull.arg_types)
+    # D x D -> Q at 2x element width: an 'x' entry on rvv-64
+    assert mull.result_type.name == "int16x8_t" and mull.width_bits == 128
+    addl = intrinsics.resolve("vaddl_u16")
+    assert addl.result_type.name == "uint32x4_t"
+    movl = intrinsics.resolve("vmovl_s8")
+    assert movl.kind == "cvt" and movl.result_type.name == "int16x8_t"
+    movn = intrinsics.resolve("vmovn_s16")      # suffix names the source
+    assert movn.arg_types[0].name == "int16x8_t"
+    assert movn.result_type.name == "int8x8_t" and movn.width_bits == 128
+    qmovun = intrinsics.resolve("vqmovun_s16")  # signed -> unsigned sat
+    assert qmovun.result_type.name == "uint8x8_t"
+    with pytest.raises(intrinsics.UnknownIntrinsic):
+        intrinsics.resolve("vqmovun_u16")       # unsigned source: invalid
+    with pytest.raises(intrinsics.UnknownIntrinsic):
+        intrinsics.resolve("vmull_f32")         # no float widening mul
+
+
+def test_resolve_struct_load_store():
+    ld2 = intrinsics.resolve("vld2q_f32")
+    assert ld2.isa_op == "vld2" and ld2.kind == "load2"
+    assert [e.name for e in ld2.result_type.elems] == \
+        ["float32x4_t", "float32x4_t"]
+    # per-register Table-2 width: native on rvv-128, an 'x' on rvv-64
+    assert ld2.width_bits == 128
+    assert intrinsics.resolve("vld2_u8").width_bits == 64
+    st2 = intrinsics.resolve("vst2q_f32")
+    assert st2.kind == "store2" and st2.result_type is None
+    assert str(st2.arg_types[1]) == "float32x4x2_t"
+
+
+def test_lowering_tuple_member_type_checks():
+    from repro.port import compile_kernel, LowerError
+    bad_member = """
+    #include <arm_neon.h>
+    void f(size_t n, const float* a, float* y) {
+      float32x4x2_t v = vld2q_f32(a);
+      vst1q_f32(y, v.val[2]);
+    }
+    """
+    with pytest.raises(LowerError, match=r"val\[2\] out of range"):
+        compile_kernel(bad_member)
+    bad_elem = """
+    #include <arm_neon.h>
+    void f(size_t n, const float* a, float* y) {
+      float32x4x2_t v = vld2q_f32(a);
+      float32x4x2_t w;
+      w.val[0] = v.val[0];
+      vst2q_f32(y, w.val[0]);
+    }
+    """
+    with pytest.raises(LowerError, match="expected float32x4x2_t"):
+        compile_kernel(bad_elem)
+
+
 # ---------------------------------------------------------------------------
 # lowering / type checking
 # ---------------------------------------------------------------------------
