@@ -51,7 +51,7 @@ UNSCALABLE = ("fold_halves_f32", "qs8_gemm_mx8_ukernel")
 # width-changing strips re-tile by the *narrow* side (lane groups): an
 # 8-lane s8 D register has 16x headroom on rvv-1024, not the f32 8x
 WIDENING_16 = ("qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
-               "s8_shl1_widen_narrow_ukernel")
+               "s8_shl1_widen_narrow_ukernel", "qs8_vmlal_dot_ukernel")
 
 # wall-clock suite geometry: large enough that the interpreter's
 # per-strip Python dispatch dominates, small enough to keep CI honest
@@ -146,7 +146,7 @@ def _assert_close(got, want, case):
 
 def check(reports, wall=None):
     """Acceptance properties of the migration sweep."""
-    assert len(reports) >= 19, f"corpus shrank to {len(reports)} kernels"
+    assert len(reports) >= 20, f"corpus shrank to {len(reports)} kernels"
     for name in LISTING_KERNELS:
         rep = reports[name]["targets"]["rvv-128"]
         assert rep["speedup"] > 1.0, \

@@ -1,0 +1,305 @@
+"""Serving-tier benchmark: batched ported kernels vs one-at-a-time.
+
+The serving engine (:mod:`repro.serve.port_engine`) answers slates of
+small independent kernel requests as one jitted ``vmap`` per
+(kernel, target, shape-bucket) — this suite measures what that buys and
+polices what it must not cost:
+
+* **throughput** — requests/s and per-submit p50/p99 latency, swept over
+  batch size (1 / 8 / 32) x target (rvv-128 / rvv-1024); the batch-32
+  engine must clear **>= 5x** the batch-1 engine's requests/s on at
+  least one RVV target per kernel (XLA launch overhead amortizes across
+  the batch).
+* **recompile bound** — a bucket-policy sweep (``fine`` base 64 growth 2
+  vs ``coarse`` growth 4) over a mixed length distribution; each
+  engine's ``batch_programs`` (distinct XLA executables demanded) must
+  stay within the analytic buckets x targets x kernels bound, and the
+  process-wide CompiledKernel LRU must miss at most once per
+  (kernel, target).
+
+  PYTHONPATH=src python benchmarks/serve_port_suite.py           # writes BENCH_serve_port.json
+  PYTHONPATH=src python benchmarks/serve_port_suite.py --check   # + regression gate
+  PYTHONPATH=src python benchmarks/serve_port_suite.py --check --quick   # CI subset (no rewrite)
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(ROOT, "examples", "neon_corpus")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro import port  # noqa: E402
+from repro.serve import BucketPolicy, PortEngine, Request  # noqa: E402
+
+# serving-shaped corpus kernels: elementwise, reduction, widening MACC
+KERNELS = {
+    "xnn_f32_vadd_ukernel": "vadd.c",
+    "xnn_f32_vdot_ukernel": "vdot.c",
+    "qs8_vmlal_dot_ukernel": "vmlal_dot.c",
+}
+TARGETS = ("rvv-128", "rvv-1024")
+BATCHES = (1, 8, 32)
+POLICIES = ("fine", "coarse")
+
+# request-length distributions: SHORT stays inside the first bucket for
+# both policies; MIXED spans two buckets (fine: 64+128, coarse: 64+256)
+SHORT_N = (20, 61)
+LONG_N = (70, 121)
+
+REPEATS = 60
+SPEEDUP_FLOOR = 5.0        # batch-32 vs batch-1 requests/s, best target
+GATE_SLACK = 0.25          # committed-baseline floor multiplier (CI varies)
+
+
+def _load_kernels(names):
+    return {name: port.compile_file(os.path.join(CORPUS, fname), name=name)
+            for name, fname in KERNELS.items() if name in names}
+
+
+def _make_requests(kernel, count, n_range, rng, target=None):
+    reqs = []
+    for _ in range(count):
+        n = int(rng.integers(*n_range))
+        if kernel.name == "qs8_vmlal_dot_ukernel":
+            a = rng.integers(-2, 3, n).astype(np.int8)
+            b = rng.integers(-2, 3, n).astype(np.int8)
+            out = np.zeros(1, np.int16)
+        elif kernel.name == "xnn_f32_vdot_ukernel":
+            a = rng.standard_normal(n).astype(np.float32)
+            b = rng.standard_normal(n).astype(np.float32)
+            out = np.zeros(1, np.float32)
+        else:
+            a = rng.standard_normal(n).astype(np.float32)
+            b = rng.standard_normal(n).astype(np.float32)
+            out = np.zeros(n, np.float32)
+        reqs.append(Request(kernel, (n, a, b, out), target=target))
+    return reqs
+
+
+def _time_submits(engine, reqs, repeats=REPEATS):
+    engine.submit(reqs)                      # compile + warmup
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        engine.submit(reqs)
+        times.append(time.perf_counter() - t0)
+    lat = np.asarray(times) * 1e3
+    p50 = float(np.percentile(lat, 50))
+    return {
+        "batch": len(reqs),
+        "reqs_per_s": round(len(reqs) / (p50 / 1e3), 1),
+        "p50_ms": round(p50, 4),
+        "p99_ms": round(float(np.percentile(lat, 99)), 4),
+    }
+
+
+def bench_batch_sweep(kernels, targets=TARGETS, batches=BATCHES, seed=0):
+    """requests/s and latency per (kernel, target, batch) — all under
+    the ``fine`` policy, single-bucket lengths, so the sweep isolates
+    batching from bucketing."""
+    rows = {}
+    for kname, kernel in kernels.items():
+        for tgt in targets:
+            for B in batches:
+                rng = np.random.default_rng(seed)
+                eng = PortEngine(target=tgt, max_batch=B,
+                                 bucket_policy="fine")
+                reqs = _make_requests(kernel, B, SHORT_N, rng)
+                rows[f"{kname}|{tgt}|b{B}"] = _time_submits(eng, reqs)
+    return rows
+
+
+def batch_speedups(rows, kernels, targets=TARGETS):
+    """Best-target batch-32 over batch-1 requests/s per kernel."""
+    out = {}
+    for kname in kernels:
+        per_tgt = {}
+        for tgt in targets:
+            lo = rows.get(f"{kname}|{tgt}|b1")
+            hi = rows.get(f"{kname}|{tgt}|b{max(BATCHES)}")
+            if lo and hi:
+                per_tgt[tgt] = round(hi["reqs_per_s"] / lo["reqs_per_s"], 2)
+        if per_tgt:
+            out[kname] = per_tgt
+    return out
+
+
+def bench_policy_sweep(kernels, targets=TARGETS, policies=POLICIES,
+                       seed=1, batch=32):
+    """Mixed-length traffic through each bucket policy: measures padding
+    overhead and proves the executable count stays within the analytic
+    buckets x targets x kernels bound."""
+    out = {}
+    for pol in policies:
+        policy = BucketPolicy.preset(pol)
+        before = port.compiled_cache_info()
+        eng = PortEngine(max_batch=batch, bucket_policy=pol)
+        rng = np.random.default_rng(seed)
+        expected_sigs = set()
+        lat = []
+        for kname, kernel in kernels.items():
+            for tgt in targets:
+                # half short, half long: two buckets per policy
+                reqs = (_make_requests(kernel, batch // 2, SHORT_N, rng,
+                                       target=tgt)
+                        + _make_requests(kernel, batch - batch // 2,
+                                         LONG_N, rng, target=tgt))
+                for r in reqs:
+                    expected_sigs.add((kname, tgt,
+                                       policy.bucket(int(r.args[0]))))
+                eng.submit(reqs)             # compile + warmup
+                t0 = time.perf_counter()
+                eng.submit(reqs)
+                lat.append(time.perf_counter() - t0)
+        st = eng.stats()
+        after = st["compile_cache"]
+        bound = len(expected_sigs)
+        assert st["batch_programs"] <= bound, \
+            f"{pol}: {st['batch_programs']} XLA programs exceed the " \
+            f"buckets x targets x kernels bound {bound}"
+        new_misses = after["misses"] - before["misses"]
+        assert new_misses <= len(kernels) * len(targets), \
+            f"{pol}: {new_misses} compile-cache misses for " \
+            f"{len(kernels)} kernels x {len(targets)} targets"
+        out[pol] = {
+            "batch_programs": st["batch_programs"],
+            "program_bound": bound,
+            "buckets": sorted({b for _, _, b in expected_sigs}),
+            "pad_overhead": round(st["pad_overhead"], 3),
+            "inert_rows": st["inert_rows"],
+            "compile_cache_misses": new_misses,
+            "submit_p50_ms": round(float(np.median(lat)) * 1e3, 3),
+        }
+    return out
+
+
+def check(rows, speedups):
+    """Acceptance: batched serving must beat single-request serving by
+    >= SPEEDUP_FLOOR on at least one RVV target per kernel."""
+    assert speedups, "no batch-sweep rows to check"
+    for kname, per_tgt in speedups.items():
+        best = max(per_tgt.values())
+        assert best >= SPEEDUP_FLOOR, \
+            f"{kname}: batch-{max(BATCHES)} only {best}x batch-1 " \
+            f"requests/s (want >= {SPEEDUP_FLOOR}x); {per_tgt}"
+    for key, row in rows.items():
+        assert row["p99_ms"] > 0 and row["reqs_per_s"] > 0, (key, row)
+
+
+def emit_json(rows, speedups, engines, path="BENCH_serve_port.json"):
+    data = {
+        "suite": "serve_port",
+        "metric": "requests_per_second",
+        "targets": list(TARGETS),
+        "batch_sizes": list(BATCHES),
+        "policies": list(POLICIES),
+        "speedup_floor": SPEEDUP_FLOOR,
+        "rows": {k: rows[k] for k in sorted(rows)},
+        "batch_speedup": speedups,
+        "engines": engines,
+        "compile_cache": port.compiled_cache_info(),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return path
+
+
+def check_regression(data, baseline_path="BENCH_serve_port.json",
+                     slack=GATE_SLACK):
+    """Fresh requests/s may not collapse below ``slack`` x the committed
+    baseline (absolute floors stay with :func:`check`; this guards
+    relative rot on rows both runs measured)."""
+    if not os.path.exists(baseline_path):
+        print(f"# no committed {baseline_path}; skipping regression gate")
+        return
+    with open(baseline_path) as f:
+        base = json.load(f)
+    problems = []
+    for key, row in data["rows"].items():
+        brow = base.get("rows", {}).get(key)
+        if brow is None:
+            continue
+        floor = brow["reqs_per_s"] * slack
+        if row["reqs_per_s"] < floor:
+            problems.append(
+                f"{key}: {row['reqs_per_s']:.0f} req/s below floor "
+                f"{floor:.0f} (baseline {brow['reqs_per_s']:.0f})")
+    for pol, eng in data.get("engines", {}).items():
+        beng = base.get("engines", {}).get(pol)
+        if beng and eng["batch_programs"] > beng["program_bound"]:
+            problems.append(
+                f"{pol}: batch_programs {eng['batch_programs']} > "
+                f"baseline bound {beng['program_bound']}")
+    if problems:
+        raise AssertionError("BENCH_serve_port regression vs committed "
+                             "baseline:\n  " + "\n  ".join(problems))
+    print(f"# regression gate vs {baseline_path}: OK")
+
+
+def main(json_path="BENCH_serve_port.json", regression=False,
+         quick=False):
+    global TARGETS, BATCHES, POLICIES
+    if quick:
+        # CI subset: one target, endpoint batch sizes, one policy —
+        # still exercises every assertion
+        TARGETS = ("rvv-128",)
+        BATCHES = (1, 32)
+        POLICIES = ("fine",)
+        names = ("xnn_f32_vadd_ukernel", "qs8_vmlal_dot_ukernel")
+    else:
+        names = tuple(KERNELS)
+    kernels = _load_kernels(names)
+
+    print(f"# batch sweep: requests/s, p50/p99 per submit "
+          f"(batches {BATCHES}, targets {TARGETS})")
+    rows = bench_batch_sweep(kernels, targets=TARGETS, batches=BATCHES)
+    for key in sorted(rows):
+        r = rows[key]
+        print(f"{key:44s} {r['reqs_per_s']:>10.0f} req/s  "
+              f"p50 {r['p50_ms']:>7.3f}ms  p99 {r['p99_ms']:>7.3f}ms")
+    speedups = batch_speedups(rows, kernels, targets=TARGETS)
+    print("\n# batch-32 vs batch-1 requests/s (per kernel, per target)")
+    for kname, per_tgt in sorted(speedups.items()):
+        print(f"{kname:34s} "
+              + "  ".join(f"{t}: {s:>5.1f}x" for t, s in per_tgt.items()))
+
+    print(f"\n# bucket-policy sweep: mixed lengths "
+          f"{SHORT_N}+{LONG_N}, policies {POLICIES}")
+    engines = bench_policy_sweep(kernels, targets=TARGETS,
+                                 policies=POLICIES)
+    for pol, eng in engines.items():
+        print(f"{pol:8s} programs {eng['batch_programs']}/"
+              f"{eng['program_bound']} (buckets {eng['buckets']})  "
+              f"pad {eng['pad_overhead']:.0%}  "
+              f"cache misses {eng['compile_cache_misses']}")
+    check(rows, speedups)
+
+    if quick:
+        # subset run: gate against the committed baseline, never
+        # overwrite it
+        if regression:
+            data = {"rows": rows, "batch_speedup": speedups,
+                    "engines": engines}
+            check_regression(data, baseline_path=json_path)
+        print("\n# quick mode: baseline not rewritten")
+        return rows
+    tmp = emit_json(rows, speedups, engines, path=json_path + ".tmp")
+    with open(tmp) as f:
+        data = json.load(f)
+    if regression:
+        check_regression(data, baseline_path=json_path)
+    os.replace(tmp, json_path)
+    print(f"\n# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(regression="--check" in sys.argv[1:],
+         quick="--quick" in sys.argv[1:])

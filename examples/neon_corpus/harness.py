@@ -210,6 +210,16 @@ def _ref_cmul(n, a, b, y):
     return out
 
 
+def _ref_vmlal_dot(n, a, b, sum_buf):
+    # integer accumulation is associative — exact in any order as long
+    # as the int16 accumulator cannot overflow (the args builder keeps
+    # |a*b| <= 4, so |sum| <= 4n stays well inside int16 for corpus n)
+    out = sum_buf.copy()
+    out[0] = np.int16(np.dot(a[:n].astype(np.int32),
+                             b[:n].astype(np.int32)))
+    return out
+
+
 def _ref_qs8_gemm(m, k, a, b, c):
     out = c.copy()
     if m:
@@ -311,6 +321,12 @@ def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
                           _rand(rng, 2 * tail_n),
                           np.zeros(2 * tail_n, F)),
              _ref_cmul),
+        Case("vmlal_dot.c", "qs8_vmlal_dot_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(-2, 3, tail_n).astype(np.int8),
+                          rng.integers(-2, 3, tail_n).astype(np.int8),
+                          np.zeros(1, np.int16)),
+             _ref_vmlal_dot),
         Case("qs8gemm.c", "qs8_gemm_mx8_ukernel", gemm_args,
              _ref_qs8_gemm),
     ]

@@ -35,8 +35,9 @@ __all__ = [
     "vext", "vrev64", "vrbit", "vdup", "vpadd", "vaddv", "vmaxv", "vminv",
     "vrecpe", "vrecps", "vrsqrte", "vrsqrts", "vcvt", "vzip", "vtbl",
     "vld1", "vst1", "vld1m", "vst1m", "vtile", "vqadd", "vqsub",
-    "vreinterpret", "vmull", "vaddl", "vsubl", "vmovl", "vmovn",
-    "vqmovn", "vqmovun", "vld2", "vst2", "vld2m", "vst2m",
+    "vreinterpret", "vmull", "vaddl", "vsubl", "vmlal", "vmlsl",
+    "vmovl", "vmovn", "vqmovn", "vqmovun", "vld2", "vst2", "vld2m",
+    "vst2m",
 ]
 
 
@@ -826,6 +827,67 @@ vmull = _widening("vmull", jnp.multiply,
                   "single widening multiply (vwmul.vv)")
 vaddl = _widening("vaddl", jnp.add, "single widening add (vwadd.vv)")
 vsubl = _widening("vsubl", jnp.subtract, "single widening sub (vwsub.vv)")
+
+
+# -- widening multiply-accumulate (vmlal/vmlsl -> RVV vwmacc) ----------------
+#
+# NEON's vmlal_<t> reads two narrow D registers and accumulates their
+# double-width products into a Q accumulator — the inner op of every
+# int8 dot/gemm microkernel.  RVV's vwmacc.vv does it in one
+# instruction (vd[2*SEW] += vs1[SEW] * vs2[SEW]); the non-customized
+# route is two widening converts plus a wide fma.  vmlsl negates the
+# product (vwmacc on a negated operand / vwmacsu pattern).
+
+def _wide_macc_width(acc, a, b, dtype, *_, **__):
+    # destination register group: the accumulator at the wide width
+    n = int(np.prod(np.shape(acc)) or 1)
+    return _strip_width(n * jnp.dtype(dtype).itemsize * 8)
+
+
+def _wide_macc_cost(ops_per_vec):
+    def cost(acc, a, b, dtype, *_, **__):
+        from .trace import vinstrs_for
+        return ops_per_vec * vinstrs_for(int(np.prod(np.shape(a)) or 1),
+                                         dtype)
+    return cost
+
+
+def _widening_macc(op_name, sign, doc):
+    @register(op_name, "generic",
+              cost=lambda acc, a, b, dtype, *_, **__:
+              int(np.prod(np.shape(a)) or 1),
+              doc="per-element widen-mul-accumulate loop")
+    def _g(acc, a, b, dtype):
+        f = jax.vmap(lambda c, x, y:
+                     c + sign * (x.astype(dtype) * y.astype(dtype)))
+        return f(jnp.ravel(acc), jnp.ravel(a),
+                 jnp.ravel(b)).reshape(jnp.shape(acc))
+
+    # non-customized conversion: widen both operands, then a wide fma
+    @register(op_name, "vector", cost=_wide_macc_cost(3),
+              width=_wide_macc_width, doc="cvt + cvt + wide fma")
+    def _v(acc, a, b, dtype):
+        return acc + sign * (a.astype(dtype) * b.astype(dtype))
+
+    # customized conversion: a single widening multiply-accumulate
+    # retiring only the double-width destination group's micro-ops
+    @register(op_name, "pallas", cost=_wide_macc_cost(1),
+              width=_wide_macc_width, doc=doc)
+    def _c(acc, a, b, dtype):
+        return acc + sign * (a.astype(dtype) * b.astype(dtype))
+
+    def api(acc, a, b, dtype):
+        return dispatch(op_name, acc, a, b, dtype)
+
+    api.__name__ = op_name
+    return api
+
+
+vmlal = _widening_macc("vmlal", 1,
+                       "single widening multiply-accumulate (vwmacc.vv)")
+vmlsl = _widening_macc("vmlsl", -1,
+                       "single widening multiply-subtract "
+                       "(vwmacc.vv on the negated multiplicand)")
 
 
 def _cvt_out_width(a, dtype, *_, **__):

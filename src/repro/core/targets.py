@@ -185,6 +185,16 @@ def get_target(t: Union[str, Target]) -> Target:
         raise KeyError(f"unknown target {t!r}; known: {sorted(TARGETS)}")
 
 
+def resolve_target(t: Optional[Union[str, Target]] = None) -> Target:
+    """Resolve a target argument to the Target *value* it denotes now.
+
+    ``None`` means the ambient thread-scoped target; anything else goes
+    through :func:`get_target`.  Callers that cache on the result pin
+    the resolved machine, not the ``None`` sentinel — two calls under
+    different :func:`use_target` scopes must never alias."""
+    return current_target() if t is None else get_target(t)
+
+
 # ---------------------------------------------------------------------------
 # Active-target state (thread-scoped, like registry policy)
 # ---------------------------------------------------------------------------

@@ -3,6 +3,11 @@
 Newer jax exposes ``pltpu.CompilerParams``; 0.4.x calls the same class
 ``TPUCompilerParams``.  Alias the new name onto the module so kernel
 call sites can use one spelling everywhere.
+
+Removal is blocked on the pinned toolchain: jax 0.4.37 (the version CI
+installs) still ships only ``TPUCompilerParams`` — probed 2026-08; drop
+this shim once the pin moves to a release exposing
+``pltpu.CompilerParams`` natively.
 """
 from jax.experimental.pallas import tpu as pltpu
 

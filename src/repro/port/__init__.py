@@ -20,7 +20,9 @@ substitution/tier/instruction-count across the RVV width family).
 """
 from __future__ import annotations
 
+import collections
 import os
+import threading
 from typing import Dict, Optional
 
 from . import cparse, intrinsics, interp, ir, lower, revec
@@ -38,9 +40,114 @@ __all__ = [
     "PortedKernel", "CompiledKernel", "compile_kernel", "compile_file",
     "load_corpus", "report", "format_report", "PORT_SWEEP",
     "parse", "lower_function", "resolve", "retile", "compile_fn",
+    "compiled_cache_info", "set_compiled_cache_capacity",
+    "compiled_cache_clear",
     "ParseError", "LowerError", "ExecError", "UnknownIntrinsic",
     "CompileError", "RetileResult",
 ]
+
+
+class _CompiledKernelCache:
+    """Process-wide bounded LRU of :class:`CompiledKernel` instances.
+
+    Every jitted variant of a ported kernel is one XLA executable plus
+    its burned-in lowering selections — dropping them on the floor per
+    PortedKernel instance (the old per-object ``_compiled`` dict) makes
+    a long-lived serving process grow without bound as targets and
+    revec/jit variants accumulate.  This mirrors the selection LRU in
+    :mod:`repro.core.registry`: OrderedDict recency order, hit/miss/
+    eviction counters, a settable capacity, and keys built from the
+    *resolved* Target value (a frozen dataclass) — an ad-hoc Target
+    sharing a registered name must not collide, and ``target=None``
+    under two different ``use_target`` scopes must not alias.
+
+    Eviction only forgets the cache's reference: holders of an evicted
+    CompiledKernel keep a working callable; the next ``compile`` call
+    for that key re-traces.
+    """
+
+    DEFAULT_CAPACITY = 256
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        self._cache: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._capacity = int(capacity)
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def get(self, kernel: "PortedKernel", *, target=None,
+            policy: Optional[str] = "pallas", revec: bool = False,
+            jit: bool = True) -> "CompiledKernel":
+        from repro.core import targets as _targets
+        tgt = _targets.resolve_target(target)
+        # PortedKernel hashes by identity; keeping it in the key also
+        # keeps it alive for as long as its compiled variants are cached.
+        key = (kernel, tgt, policy, bool(revec), bool(jit))
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._hits += 1
+                self._cache.move_to_end(key)
+                return hit
+        # Trace outside the lock: compilation is slow and reentrant
+        # (dispatch may consult the registry LRU).  A racing thread may
+        # compile the same key; first store wins, the loser's trace is
+        # discarded (correct either way — both pin the same Target).
+        compiled = CompiledKernel(kernel, target=tgt, policy=policy,
+                                  revec=revec, jit=jit)
+        with self._lock:
+            again = self._cache.get(key)
+            if again is not None:
+                self._hits += 1
+                self._cache.move_to_end(key)
+                return again
+            self._misses += 1
+            self._cache[key] = compiled
+            while len(self._cache) > self._capacity:
+                self._cache.popitem(last=False)
+                self._evictions += 1
+        return compiled
+
+    def cache_info(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "size": len(self._cache), "capacity": self._capacity,
+                    "evictions": self._evictions}
+
+    def set_capacity(self, n: int) -> None:
+        if n < 1:
+            raise ValueError(f"capacity must be >= 1, got {n}")
+        with self._lock:
+            self._capacity = int(n)
+            while len(self._cache) > self._capacity:
+                self._cache.popitem(last=False)
+                self._evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._hits = self._misses = self._evictions = 0
+
+
+_COMPILED_CACHE = _CompiledKernelCache()
+
+
+def compiled_cache_info() -> Dict[str, int]:
+    """Counters for the process-wide CompiledKernel LRU:
+    hits/misses/size/capacity/evictions."""
+    return _COMPILED_CACHE.cache_info()
+
+
+def set_compiled_cache_capacity(n: int) -> None:
+    """Bound the process-wide CompiledKernel cache (evicts LRU-first
+    immediately if already over)."""
+    _COMPILED_CACHE.set_capacity(n)
+
+
+def compiled_cache_clear() -> None:
+    """Drop all cached CompiledKernels and reset the counters."""
+    _COMPILED_CACHE.clear()
 
 
 class PortedKernel:
@@ -92,17 +199,14 @@ class PortedKernel:
         the ambient thread-scoped target *now* — the lowering selections
         are burned into the trace, so the resolved machine is pinned
         into the executable (and the cache key), not re-read per call.
-        Compiled kernels are cached per (target, policy, revec).
+
+        Results come from the process-wide bounded LRU (see
+        :func:`compiled_cache_info`), keyed on this kernel plus the
+        resolved Target *value* — not its name, so ad-hoc Targets that
+        share a registered name get their own entries.
         """
-        from repro.core import targets as _targets
-        tgt = (_targets.get_target(target) if target is not None
-               else _targets.current_target())
-        key = (tgt.name, policy, bool(revec), bool(jit))
-        cache = self.__dict__.setdefault("_compiled", {})
-        if key not in cache:
-            cache[key] = CompiledKernel(self, target=tgt, policy=policy,
-                                        revec=revec, jit=jit)
-        return cache[key]
+        return _COMPILED_CACHE.get(self, target=target, policy=policy,
+                                   revec=revec, jit=jit)
 
     def substitution(self, target) -> Dict[str, bool]:
         """Table 2 for this kernel: per intrinsic, does its fixed-width
@@ -135,8 +239,7 @@ class CompiledKernel:
                  jit: bool = True):
         from repro.core import targets as _targets
         self.source_kernel = kernel
-        self.target = (_targets.get_target(target) if target is not None
-                       else _targets.current_target())
+        self.target = _targets.resolve_target(target)
         self.policy = policy
         self.revec = revec
         self.retiling: Optional[RetileResult] = None

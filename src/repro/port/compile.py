@@ -359,8 +359,8 @@ class _Tracer:
             out = self.dispatch(isa_op, env[ins.args[0]],
                                 jnp.dtype(rty.dtype))
         elif kind == "vv_cvt":
-            out = self.dispatch(isa_op, env[ins.args[0]],
-                                env[ins.args[1]], jnp.dtype(rty.dtype))
+            out = self.dispatch(isa_op, *(env[v] for v in ins.args),
+                                jnp.dtype(rty.dtype))
         elif kind == "load2":
             buf, off = env[ins.args[0]]
             out = self.dispatch(isa_op, self.memory[buf], off, rty.lanes)

@@ -357,7 +357,8 @@ class Machine:
                    else env[ins.args[0]])
             args = [vec, jnp.dtype(rty.dtype)]
         elif kind == "vv_cvt":
-            # widening binary: (a, b, out dtype), like cvt with two regs
+            # widening arithmetic: (*regs, out dtype) — binary vmull/
+            # vaddl/vsubl or ternary vmlal/vmlsl, like cvt with n regs
             ab = [env[v] if not self.abstract else abstract_reg(v.type)
                   for v in ins.args]
             args = ab + [jnp.dtype(rty.dtype)]

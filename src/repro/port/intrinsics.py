@@ -25,6 +25,7 @@ The name grammar handled::
     vcvt[q]_<to>_<from>           lane-wise conversion
     vget[q]_lane_<elem>           lane extract to scalar
     v{mull,addl,subl}_<elem>      widening D x D -> Q arithmetic
+    v{mlal,mlsl}_<elem>           widening multiply-accumulate into Q
     vmovl_<elem>                  widening move D -> Q
     v{movn,qmovn,qmovun}_<elem>   narrowing move Q -> D (q* saturate)
     vld2[q]_<elem>                de-interleaving 2-register struct load
@@ -204,6 +205,17 @@ def _resolve(name: str) -> Optional[IntrinSpec]:  # noqa: C901
         dt = _ELEM[m.group(2)]
         d, q = _vt(dt, False), _vt(_double(dt), True)
         return IntrinSpec(name, f"v{m.group(1)}", "vv_cvt", (d, d), q,
+                          q.bits)
+
+    # widening multiply-accumulate: v{mlal,mlsl}_<elem> — Q acc +/-
+    # D x D products at 2x element width (RVV vwmacc.vv: one widening
+    # mul-acc writing the double-width accumulator group)
+    m = re.match(r"^v(mlal|mlsl)_([a-z0-9]+)$", name)
+    if m and m.group(2) in _ELEM and not m.group(2).startswith("f") \
+            and _ebits(_ELEM[m.group(2)]) <= 32:
+        dt = _ELEM[m.group(2)]
+        d, q = _vt(dt, False), _vt(_double(dt), True)
+        return IntrinSpec(name, f"v{m.group(1)}", "vv_cvt", (q, d, d), q,
                           q.bits)
 
     # vmovl_<elem> — widening move D -> Q (vsext/vzext)

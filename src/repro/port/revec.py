@@ -72,7 +72,8 @@ _SCALABLE = {
     "vceq", "vcgt", "vcge", "vclt", "vcle", "vbsl",
     "vdup", "vld1", "vst1", "vcvt", "vshl_n", "vshr_n",
     "vrbit", "vrev64", "vreinterpret",
-    "vmull", "vaddl", "vsubl", "vmovl", "vmovn", "vqmovn", "vqmovun",
+    "vmull", "vaddl", "vsubl", "vmlal", "vmlsl", "vmovl", "vmovn",
+    "vqmovn", "vqmovun",
     "vld2", "vst2", "tuple_get", "tuple_set", "tuple_undef",
 }
 # post-loop reduction consumers a widened accumulator may flow into
@@ -615,7 +616,10 @@ class _Retiler:
                              (ins.args[1], ins.args[0])):
                     if acc_of(x) is not None and zeroish.get(id(y), False):
                         preserved[rid] = acc_of(x)
-            elif isa_op in ("vfma", "vmla", "vmls"):
+            elif isa_op in ("vfma", "vmla", "vmls", "vmlal", "vmlsl"):
+                # the widening macc family preserves its accumulator the
+                # same way: a zero-filled masked load makes the (widened)
+                # product zero, so acc +/- 0 passes through
                 acc = acc_of(ins.args[0])
                 if acc is not None and any(
                         zeroish.get(id(a), False) for a in ins.args[1:]):

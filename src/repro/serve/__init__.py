@@ -1,1 +1,9 @@
-"""repro.serve substrate."""
+"""repro.serve substrate.
+
+:mod:`repro.serve.engine` serves the model stack (batched prefill +
+decode); :mod:`repro.serve.port_engine` serves *ported kernels* —
+batched, bucketed, cache-managed execution of migrated NEON code.
+"""
+from .port_engine import BucketPolicy, PortEngine, Request
+
+__all__ = ["BucketPolicy", "PortEngine", "Request"]

@@ -1,0 +1,347 @@
+"""serve.port — batched, bucketed serving tier for compiled ported kernels.
+
+A migrated NEON kernel compiled through :meth:`PortedKernel.compile`
+answers one request per call: one XLA executable launch for one ``n``.
+A serving process sees thousands of small independent requests — vadd
+over a few hundred elements, a qs8 dot-product per feature row — and
+per-request launch overhead dominates.  This engine batches them:
+
+* **vmap batching** — requests for the same (kernel, target) run as one
+  jitted ``jax.vmap`` of the *eager* compiled kernel.  Every argument is
+  mapped over the batch axis: scalar params become ``(B,)`` vectors (the
+  closed-form ``fori_loop`` trip counts become traced per-row values,
+  which JAX's while_loop batching rule handles), pointer params become
+  ``(B, L)`` buffers.
+
+* **geometric shape buckets** — XLA specializes per shape, so free-form
+  ``n`` would recompile per distinct length.  Buffer lengths are padded
+  up to per-bucket canonical shapes (``BucketPolicy``: base x growth^k)
+  and the batch axis is padded to a fixed ``max_batch`` with inert
+  ``n = 0`` rows, so the executable count is bounded by
+  buckets x targets x kernels per engine.  Padding is legal for the
+  same reason the re-vectorizer's masked tails are: trip counts derive
+  from the *actual* per-row ``n``, so padded regions are never read and
+  never written; outputs are sliced back to request length.
+
+* **shape model from the IR** — how long must a padded buffer be for a
+  given ``n``?  The strip-loop matcher (:func:`repro.port.revec.strip_loops`)
+  already proves each pointer's affine walk; ``ptr_step / step`` is its
+  element stride per unit ``n``.  Buffers the strip does not walk (the
+  length-1 ``sum`` output of a dot kernel, packed weights) keep their
+  exact length and join the group key instead.
+
+* **compile reuse** — all compilation goes through the process-wide
+  bounded CompiledKernel LRU (:func:`repro.port.compiled_cache_info`);
+  :meth:`PortEngine.warmup` pre-populates it from a corpus with eager
+  (``jit=False``) compiles, the deploy-time shape probe.
+
+Mixed fleets route per request: ``Request(target="rvv-1024")`` overrides
+the engine default, so rvv-128 and rvv-1024 traffic batch side by side
+in one :meth:`submit` call (grouped separately, like
+:class:`repro.serve.engine.Engine`'s per-target jitted steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import targets as _targets
+from repro.port import PortedKernel, revec
+from repro.port.ir import PtrType, ScalarType
+
+__all__ = ["BucketPolicy", "Request", "PortEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Geometric length buckets: ``base * growth^k`` for k = 0, 1, ...
+
+    Finer buckets waste less padding per request but admit more shapes
+    (more XLA executables); coarser buckets bound compiles harder at
+    higher padding waste.  ``bucket(n)`` returns the smallest bucket
+    holding ``n``.
+    """
+
+    name: str
+    base: int = 64
+    growth: int = 2
+
+    def bucket(self, n: int) -> int:
+        n = max(1, int(n))
+        b = self.base
+        while b < n:
+            b *= self.growth
+        return b
+
+    @staticmethod
+    def preset(name: str) -> "BucketPolicy":
+        try:
+            return _BUCKET_PRESETS[name]
+        except KeyError:
+            raise KeyError(f"unknown bucket policy {name!r}; "
+                           f"known: {sorted(_BUCKET_PRESETS)}")
+
+
+_BUCKET_PRESETS = {
+    "fine": BucketPolicy("fine", base=64, growth=2),
+    "coarse": BucketPolicy("coarse", base=64, growth=4),
+}
+
+
+@dataclasses.dataclass
+class Request:
+    """One kernel invocation: args follow the PortedKernel calling
+    convention (ints for scalar params, 1-D arrays for pointers).
+    ``target=None`` uses the engine's default target."""
+
+    kernel: PortedKernel
+    args: Sequence[Any]
+    target: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShapeModel:
+    """Per-kernel padding rules derived from the strip-loop IR.
+
+    ``strides[i]`` is the element stride per unit ``n`` for pointer
+    param ``i`` (padded length = bucket(n) * stride); pointer params
+    absent from ``strides`` keep their exact length in the group key.
+    ``counter`` is the scalar param index driving the strip (None when
+    no strip loop matched — every buffer then keys on exact length and
+    batching still works, just without length bucketing).
+    """
+
+    counter: Optional[int]
+    strides: Tuple[Tuple[int, int], ...]
+
+    @staticmethod
+    def derive(kernel: PortedKernel) -> "_ShapeModel":
+        fn = kernel.fn
+        pindex = {p: i for i, p in enumerate(fn.params)}
+        counter: Optional[int] = None
+        strides: Dict[int, int] = {}
+        for info in revec.strip_loops(fn):
+            loop = info.loop
+            init = loop.init[loop.phis.index(info.counter)]
+            ci = pindex.get(init)
+            if ci is None or not isinstance(fn.params[ci].type, ScalarType):
+                continue
+            if counter is None:
+                counter = ci
+            elif counter != ci:
+                continue            # second strip on a different counter
+            for pphi, d in info.ptr_steps.items():
+                pinit = loop.init[loop.phis.index(pphi)]
+                pi = pindex.get(pinit)
+                if pi is None or d <= 0 or d % info.step != 0:
+                    continue
+                strides.setdefault(pi, d // info.step)
+        return _ShapeModel(counter, tuple(sorted(strides.items())))
+
+
+class PortEngine:
+    """Batched, bucketed, cache-managed serving of ported kernels."""
+
+    def __init__(self, *, target: Any = None, policy: str = "pallas",
+                 revec: bool = True, bucket_policy: Any = "fine",
+                 max_batch: int = 32):
+        self.target = target            # engine default; per-request override
+        self.policy = policy
+        self.revec = bool(revec)
+        self.bucket_policy = (BucketPolicy.preset(bucket_policy)
+                              if isinstance(bucket_policy, str)
+                              else bucket_policy)
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self._models: Dict[int, _ShapeModel] = {}
+        self._programs: Dict[Tuple[int, Any], Any] = {}
+        self._shapes_seen: set = set()
+        self._stats = {"requests": 0, "batches": 0, "inert_rows": 0,
+                       "padded_elems": 0, "payload_elems": 0}
+
+    # -- shape model -------------------------------------------------------
+
+    def _model(self, kernel: PortedKernel) -> _ShapeModel:
+        m = self._models.get(id(kernel))
+        if m is None:
+            m = self._models[id(kernel)] = _ShapeModel.derive(kernel)
+        return m
+
+    def _plan(self, req: Request):
+        """Group key + padded buffer lengths for one request."""
+        kernel, args = req.kernel, req.args
+        if len(args) != len(kernel.fn.params):
+            raise ValueError(
+                f"{kernel.name} takes {len(kernel.fn.params)} args, "
+                f"got {len(args)}")
+        tgt = _targets.resolve_target(
+            req.target if req.target is not None else self.target)
+        model = self._model(kernel)
+        strides = dict(model.strides)
+        bucket = 0
+        if model.counter is not None:
+            # the bucket must hold both the request's n and every
+            # strip-walked buffer the caller handed us (a buffer longer
+            # than n*stride promotes the bucket so padding never
+            # truncates untouched caller bytes)
+            need = int(args[model.counter])
+            for pi, s in strides.items():
+                need = max(need, math.ceil(len(args[pi]) / s))
+            bucket = self.bucket_policy.bucket(need)
+        lens = []
+        for i, p in enumerate(kernel.fn.params):
+            if not isinstance(p.type, PtrType):
+                lens.append(None)
+            elif i in strides:
+                lens.append(bucket * strides[i])
+            else:
+                lens.append(len(args[i]))
+        # exact-length (non-strip) buffers join the key so every row in
+        # a group shares one canonical shape tuple
+        extras = tuple(lens[i] for i, p in enumerate(kernel.fn.params)
+                       if isinstance(p.type, PtrType) and i not in strides)
+        key = (id(kernel), tgt, bucket, extras)
+        return key, tgt, lens
+
+    # -- batch programs ----------------------------------------------------
+
+    def _program(self, kernel: PortedKernel, tgt):
+        pk = (id(kernel), tgt)
+        prog = self._programs.get(pk)
+        if prog is None:
+            # eager (jit=False) compile from the process-wide LRU; the
+            # jit wraps the *vmapped* callable so one executable serves
+            # the whole batch
+            eager = kernel.compile(target=tgt, policy=self.policy,
+                                   revec=self.revec, jit=False)
+            prog = self._programs[pk] = jax.jit(jax.vmap(eager))
+        return prog
+
+    # -- serving -----------------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> List[Any]:
+        """Run a slate of requests; returns results in request order,
+        each exactly what calling the kernel directly would return (one
+        array, or a tuple for multi-output kernels)."""
+        groups: Dict[Any, List[int]] = {}
+        plans = []
+        for idx, req in enumerate(requests):
+            key, tgt, lens = self._plan(req)
+            plans.append((key, tgt, lens))
+            groups.setdefault(key, []).append(idx)
+        results: List[Any] = [None] * len(requests)
+        for key, members in groups.items():
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                self._run_chunk(requests, plans, chunk, results)
+        self._stats["requests"] += len(requests)
+        return results
+
+    def __call__(self, requests: Sequence[Request]) -> List[Any]:
+        return self.submit(requests)
+
+    def _run_chunk(self, requests, plans, chunk, results):
+        req0 = requests[chunk[0]]
+        kernel = req0.kernel
+        _, tgt, lens = plans[chunk[0]]
+        model = self._model(kernel)
+        params = kernel.fn.params
+        B = self.max_batch
+
+        cols = []
+        for i, p in enumerate(params):
+            if isinstance(p.type, PtrType):
+                L = lens[i]
+                dt = np.asarray(requests[chunk[0]].args[i]).dtype
+                col = np.zeros((B, L), dtype=dt)
+                for r, idx in enumerate(chunk):
+                    a = np.asarray(requests[idx].args[i])
+                    col[r, :len(a)] = a
+                cols.append(jnp.asarray(col))
+            else:
+                vals = [requests[idx].args[i] for idx in chunk]
+                # inert padding rows: n = 0 makes every trip count zero,
+                # so the zero buffers are never touched
+                pad_val = 0 if i == model.counter else (
+                    vals[0] if vals else 0)
+                vals = vals + [pad_val] * (B - len(chunk))
+                cols.append(jnp.asarray(np.asarray(vals)))
+
+        shape_sig = (id(kernel), tgt,
+                     tuple(None if l is None else l for l in lens))
+        self._shapes_seen.add(shape_sig)
+        self._stats["batches"] += 1
+        self._stats["inert_rows"] += B - len(chunk)
+
+        outs = self._program(kernel, tgt)(*cols)
+        writes = kernel.fn.writes
+        if len(writes) == 1:
+            outs = (outs,)
+        # one device->host transfer per output column; per-row numpy
+        # slices are free views (vs 32 traced jax slice dispatches)
+        outs = tuple(np.asarray(o) for o in outs)
+        out_params = [i for i, p in enumerate(params)
+                      if isinstance(p.type, PtrType) and p.hint in writes]
+        for r, idx in enumerate(chunk):
+            per_req = []
+            for oi, pi in zip(range(len(writes)), out_params):
+                orig_len = len(requests[idx].args[pi])
+                per_req.append(outs[oi][r, :orig_len])
+                self._stats["payload_elems"] += orig_len
+                self._stats["padded_elems"] += outs[oi].shape[1]
+            results[idx] = (per_req[0] if len(per_req) == 1
+                            else tuple(per_req))
+
+    # -- deploy hooks ------------------------------------------------------
+
+    def warmup(self, corpus, targets: Sequence[Any] = ()) -> Dict[str, int]:
+        """Pre-populate the compile cache for a deploy: eager
+        (``jit=False``) compiles of every corpus kernel for every
+        target — the cheap shape-probing pass that burns in lowering
+        selections without paying XLA compiles up front.
+
+        ``corpus`` is a dict (name -> PortedKernel, as returned by
+        :func:`repro.port.load_corpus`) or an iterable of kernels;
+        ``targets`` defaults to the engine's own target.
+        """
+        kernels = (corpus.values() if isinstance(corpus, dict) else corpus)
+        kernels = list(kernels)
+        tgts = [_targets.resolve_target(t) for t in targets] or \
+               [_targets.resolve_target(self.target)]
+        n = 0
+        for k in kernels:
+            self._model(k)          # derive the padding rules up front
+            for t in tgts:
+                k.compile(target=t, policy=self.policy,
+                          revec=self.revec, jit=False)
+                n += 1
+        return {"kernels": len(kernels), "targets": len(tgts),
+                "compiles": n}
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters.  ``batch_programs`` counts distinct
+        (kernel, target, canonical shape) signatures — the number of
+        XLA executables this engine has demanded, bounded by
+        buckets x targets x kernels."""
+        from repro import port as _port
+        s = dict(self._stats)
+        s["batch_programs"] = len(self._shapes_seen)
+        s["pad_overhead"] = (
+            0.0 if s["payload_elems"] == 0
+            else s["padded_elems"] / s["payload_elems"] - 1.0)
+        s["compile_cache"] = _port.compiled_cache_info()
+        return s
+
+    def cache_info(self) -> Dict[str, int]:
+        """The process-wide CompiledKernel LRU counters (shared across
+        engines — see :func:`repro.port.compiled_cache_info`)."""
+        from repro import port as _port
+        return _port.compiled_cache_info()

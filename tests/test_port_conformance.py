@@ -57,7 +57,8 @@ def _ulp_budget(case: harness.Case) -> int:
 _KERNELS = [c.kernel for c in harness.cases()]
 # the new width-changing / struct-load surface this suite guards
 WIDENING_KERNELS = ("qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
-                    "s8_shl1_widen_narrow_ukernel")
+                    "s8_shl1_widen_narrow_ukernel",
+                    "qs8_vmlal_dot_ukernel")
 STRUCT_KERNELS = ("cmul_f32_ukernel",)
 
 
@@ -165,7 +166,7 @@ def test_interp_conformance(kernel, target, kernels):
 
 NEW_SURFACE = ("qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
                "s8_shl1_widen_narrow_ukernel", "cmul_f32_ukernel",
-               "qs8_gemm_mx8_ukernel")
+               "qs8_gemm_mx8_ukernel", "qs8_vmlal_dot_ukernel")
 
 
 # XLA recompiles per buffer shape, so the compiled matrix is the
@@ -294,6 +295,41 @@ if HAS_HYPOTHESIS:
                          f"{kernel}/n={n}/property")
         _assert_conforms(wide, narrow, case,
                          f"{kernel}/n={n}/property-vs-narrow")
+
+
+# ---------------------------------------------------------------------------
+# eager (jit=False) executor: the serving warm-up path
+# ---------------------------------------------------------------------------
+
+# the kernels the serving tier's bench exercises: elementwise,
+# reduction, widening MACC
+EAGER_KERNELS = ("xnn_f32_vadd_ukernel", "xnn_f32_vdot_ukernel",
+                 "qs8_vmlal_dot_ukernel")
+
+
+@pytest.mark.parametrize("kernel", EAGER_KERNELS)
+def test_eager_compile_conformance(kernel, kernels):
+    """``compile(jit=False)`` is the serving tier's shape-probing
+    warm-up and the callable its batch programs ``vmap`` — the eager
+    trace must agree with the jitted executor and the reference at
+    tail-critical lengths, with and without re-vectorization."""
+    k = kernels[kernel]
+    step = _strip_step(k)
+    for target in ("rvv-128", "rvv-1024"):
+        for revec_mode in (False, True):
+            eager = k.compile(target=target, revec=revec_mode, jit=False)
+            jitted = k.compile(target=target, revec=revec_mode, jit=True)
+            assert eager is not jitted, \
+                "jit=False and jit=True must be distinct cache entries"
+            for i, n in enumerate((0, step + 1)):
+                case = _case_for(kernel, n)
+                args = _args_for(case, seed=3000 + i)
+                want = case.reference(*args)
+                label = f"{kernel}/{target}/n={n}/revec={revec_mode}"
+                _assert_conforms(eager(*args), want, case,
+                                 label + "/eager")
+                _assert_conforms(jitted(*args), want, case,
+                                 label + "/jitted")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,250 @@
+"""Serving-tier tests: batched engine correctness, the bucketed
+executable bound, and the process-wide CompiledKernel cache semantics
+(including the resolved-target keying regression)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro import port
+from repro.core import targets
+from repro.serve import BucketPolicy, PortEngine, Request
+
+CORPUS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                      "examples", "neon_corpus"))
+
+
+@pytest.fixture(scope="module")
+def kernels():
+    return {name: port.compile_file(os.path.join(CORPUS, fname),
+                                    name=name)
+            for name, fname in (("xnn_f32_vadd_ukernel", "vadd.c"),
+                                ("xnn_f32_vdot_ukernel", "vdot.c"),
+                                ("qs8_vmlal_dot_ukernel",
+                                 "vmlal_dot.c"))}
+
+
+def _requests(kernels, rng, ns, target=None):
+    reqs = []
+    for kname, n in ns:
+        k = kernels[kname]
+        if kname == "qs8_vmlal_dot_ukernel":
+            a = rng.integers(-2, 3, n).astype(np.int8)
+            b = rng.integers(-2, 3, n).astype(np.int8)
+            out = np.zeros(1, np.int16)
+        elif kname == "xnn_f32_vdot_ukernel":
+            a = rng.standard_normal(n).astype(np.float32)
+            b = rng.standard_normal(n).astype(np.float32)
+            out = np.zeros(1, np.float32)
+        else:
+            a = rng.standard_normal(n).astype(np.float32)
+            b = rng.standard_normal(n).astype(np.float32)
+            out = np.zeros(n, np.float32)
+        reqs.append(Request(k, (n, a, b, out), target=target))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# engine correctness
+# ---------------------------------------------------------------------------
+
+def test_submit_matches_direct_calls(kernels):
+    """A mixed slate (three kernels, tails of every shape) must return
+    exactly what calling each compiled kernel directly returns, in
+    request order."""
+    rng = np.random.default_rng(0)
+    ns = [("xnn_f32_vadd_ukernel", n) for n in (1, 3, 4, 5, 63, 64, 65)]
+    ns += [("xnn_f32_vdot_ukernel", n) for n in (2, 7, 33)]
+    ns += [("qs8_vmlal_dot_ukernel", n) for n in (1, 8, 40)]
+    reqs = _requests(kernels, rng, ns)
+    eng = PortEngine(target="rvv-128", max_batch=8)
+    results = eng.submit(reqs)
+    assert len(results) == len(reqs)
+    for req, got in zip(reqs, results):
+        want = np.asarray(req.kernel.compile(target="rvv-128")(*req.args))
+        got = np.asarray(got)
+        assert got.shape == want.shape and got.dtype == want.dtype
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_mixed_target_fleet_routes_per_request(kernels):
+    """rvv-128 and rvv-1024 requests batch side by side in one submit,
+    each against its own target's executable."""
+    rng = np.random.default_rng(1)
+    wide = _requests(kernels, rng, [("xnn_f32_vadd_ukernel", 40)] * 3,
+                     target="rvv-1024")
+    narrow = _requests(kernels, rng, [("xnn_f32_vadd_ukernel", 40)] * 3,
+                       target="rvv-128")
+    eng = PortEngine(target="rvv-128", max_batch=4)
+    interleaved = [wide[0], narrow[0], wide[1], narrow[1], wide[2],
+                   narrow[2]]
+    results = eng.submit(interleaved)
+    for req, got in zip(interleaved, results):
+        want = np.asarray(
+            req.kernel.compile(target=req.target)(*req.args))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+    # two groups (one per target), each one chunk of max_batch=4
+    st = eng.stats()
+    assert st["batches"] == 2
+    assert st["inert_rows"] == 2          # 3 real rows per 4-row chunk
+
+
+def test_oversize_buffer_promotes_bucket(kernels):
+    """A caller handing a buffer longer than n * stride must not have
+    its untouched tail truncated: the bucket promotes to hold it."""
+    k = kernels["xnn_f32_vadd_ukernel"]
+    n = 4
+    a = np.arange(200, dtype=np.float32)
+    b = np.ones(200, np.float32)
+    y = np.full(200, -7.0, np.float32)
+    eng = PortEngine(target="rvv-128", max_batch=2)
+    got = np.asarray(eng.submit([Request(k, (n, a, b, y))])[0])
+    want = np.asarray(k.compile(target="rvv-128")(n, a, b, y))
+    assert got.shape == (200,)
+    np.testing.assert_allclose(got, want)
+
+
+def test_chunking_splits_groups_at_max_batch(kernels):
+    """A group larger than max_batch splits into full-size padded
+    chunks; results still line up with request order."""
+    rng = np.random.default_rng(2)
+    reqs = _requests(kernels, rng, [("xnn_f32_vdot_ukernel", 17)] * 5)
+    eng = PortEngine(target="rvv-128", max_batch=2)
+    results = eng.submit(reqs)
+    st = eng.stats()
+    assert st["batches"] == 3 and st["inert_rows"] == 1
+    for req, got in zip(reqs, results):
+        want = np.asarray(req.kernel.compile(target="rvv-128")(*req.args))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_bad_arity_raises(kernels):
+    eng = PortEngine(target="rvv-128")
+    with pytest.raises(ValueError, match="takes 4 args"):
+        eng.submit([Request(kernels["xnn_f32_vadd_ukernel"], (4,))])
+
+
+# ---------------------------------------------------------------------------
+# bucketing + the executable bound
+# ---------------------------------------------------------------------------
+
+def test_bucket_policy_geometry():
+    fine = BucketPolicy.preset("fine")
+    coarse = BucketPolicy.preset("coarse")
+    assert [fine.bucket(n) for n in (0, 1, 64, 65, 128, 129)] == \
+        [64, 64, 64, 128, 128, 256]
+    assert [coarse.bucket(n) for n in (1, 64, 65, 256, 257)] == \
+        [64, 64, 256, 256, 1024]
+    with pytest.raises(KeyError, match="unknown bucket policy"):
+        BucketPolicy.preset("nope")
+
+
+def test_batch_programs_bounded_by_buckets(kernels):
+    """Free-form lengths across two buckets and two targets demand at
+    most buckets x targets x kernels executables — resubmitting new
+    lengths inside the same buckets adds none."""
+    rng = np.random.default_rng(3)
+    eng = PortEngine(target="rvv-128", max_batch=4, bucket_policy="fine")
+    names = ("xnn_f32_vadd_ukernel", "qs8_vmlal_dot_ukernel")
+    for tgt in ("rvv-128", "rvv-1024"):
+        for _ in range(2):
+            ns = [(nm, int(rng.integers(8, 60))) for nm in names]
+            ns += [(nm, int(rng.integers(70, 120))) for nm in names]
+            eng.submit(_requests(kernels, rng, ns, target=tgt))
+    st = eng.stats()
+    bound = 2 * 2 * 2                      # buckets x targets x kernels
+    assert st["batch_programs"] <= bound, st
+    before = st["batch_programs"]
+    # fresh lengths, same buckets: no new executables
+    ns = [(nm, int(rng.integers(8, 60))) for nm in names]
+    eng.submit(_requests(kernels, rng, ns, target="rvv-128"))
+    assert eng.stats()["batch_programs"] == before
+
+
+def test_warmup_populates_compile_cache(kernels):
+    eng = PortEngine(target="rvv-128")
+    before = port.compiled_cache_info()
+    stats = eng.warmup(kernels, targets=["rvv-128", "rvv-1024"])
+    assert stats == {"kernels": 3, "targets": 2, "compiles": 6}
+    after = port.compiled_cache_info()
+    # every (kernel, target) now resident: warming again is all hits
+    eng.warmup(kernels, targets=["rvv-128", "rvv-1024"])
+    again = port.compiled_cache_info()
+    assert again["misses"] == after["misses"]
+    assert again["hits"] >= after["hits"] + 6
+    assert after["misses"] >= before["misses"]
+
+
+# ---------------------------------------------------------------------------
+# the process-wide CompiledKernel cache
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_keys_on_resolved_target(kernels):
+    """Regression (satellite 2): ``compile()`` under two different
+    ``use_target`` scopes must pin two different executables — the old
+    per-kernel dict keyed the ``None`` sentinel's *name* and aliased
+    them."""
+    k = kernels["xnn_f32_vadd_ukernel"]
+    with targets.use_target("rvv-128"):
+        narrow = k.compile()
+    with targets.use_target("rvv-1024"):
+        wide = k.compile()
+    assert narrow is not wide
+    assert narrow.target.name == "rvv-128"
+    assert wide.target.name == "rvv-1024"
+    # and the explicit spelling resolves to the same cache entry
+    assert k.compile(target="rvv-128") is narrow
+
+
+def test_compile_cache_keys_on_target_value(kernels):
+    """An ad-hoc Target sharing a registered name gets its own entry
+    (value keying, mirroring the selection LRU)."""
+    k = kernels["xnn_f32_vadd_ukernel"]
+    registered = k.compile(target="rvv-128")
+    adhoc = dataclasses.replace(targets.get_target("rvv-128"), vlen=256)
+    compiled = k.compile(target=adhoc)
+    assert compiled is not registered
+    assert compiled.target.vlen == 256
+    assert k.compile(target=adhoc) is compiled
+
+
+def test_compile_cache_bounded_eviction(kernels):
+    """Capacity is enforced LRU-first, counters track it, and an
+    evicted entry recompiles on demand (holders keep working)."""
+    k = kernels["xnn_f32_vdot_ukernel"]
+    info = port.compiled_cache_info()
+    try:
+        port.set_compiled_cache_capacity(2)
+        c64 = k.compile(target="rvv-64")
+        k.compile(target="rvv-256")
+        k.compile(target="rvv-512")        # evicts rvv-64
+        info2 = port.compiled_cache_info()
+        assert info2["capacity"] == 2 and info2["size"] == 2
+        assert info2["evictions"] >= 1
+        again = k.compile(target="rvv-64") # recompiled, new object
+        assert again is not c64
+        # the evicted handle still executes
+        a = np.ones(5, np.float32)
+        np.testing.assert_allclose(
+            np.asarray(c64(5, a, a, np.zeros(1, np.float32))),
+            np.asarray(again(5, a, a, np.zeros(1, np.float32))))
+    finally:
+        port.set_compiled_cache_capacity(
+            max(info["capacity"], port._CompiledKernelCache
+                .DEFAULT_CAPACITY))
+
+    with pytest.raises(ValueError, match="capacity must be >= 1"):
+        port.set_compiled_cache_capacity(0)
+
+
+def test_compile_cache_info_counts(kernels):
+    port.compiled_cache_clear()
+    k = kernels["qs8_vmlal_dot_ukernel"]
+    assert port.compiled_cache_info()["size"] == 0
+    k.compile(target="rvv-128")
+    k.compile(target="rvv-128")
+    info = port.compiled_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 1
+    assert info["size"] == 1
