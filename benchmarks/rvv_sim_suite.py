@@ -1,0 +1,236 @@
+"""Retired-instruction suite for the emitted-RVV path.
+
+Where benchmarks/port_suite.py sweeps the *cost model* (estimated
+dynamic instructions), this suite executes the **emitted RVV intrinsic
+streams** on the in-repo simulator (``repro.rvv``) and records what
+actually retired — vector instructions, explicit and compiler-implicit
+``vsetvli``s, and LMUL-weighted vuops — per corpus kernel per width.
+Every run is also a differential check: the simulator's outputs must
+match the exact NumPy references before a count is recorded.
+
+Acceptance mirrors the re-vectorizer's bar, now on retired facts
+instead of estimates: scalable strip kernels must retire >= 4x fewer
+instructions on rvv-1024 than on rvv-128 at serving size, and the
+fixed-shape counter-examples must not budge.
+
+When an RVV-capable C compiler is on PATH (clang with a riscv64
+target, or a riscv64 cross gcc), every emitted unit is additionally
+syntax-checked under ``-march=rv64gcv``; otherwise that smoke is
+skipped and reported as such.
+
+  PYTHONPATH=src python benchmarks/rvv_sim_suite.py          # writes BENCH_rvv_sim.json
+  PYTHONPATH=src python benchmarks/rvv_sim_suite.py --check  # + regression gate
+                                                             #   vs committed JSON
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(ROOT, "examples", "neon_corpus")
+sys.path.insert(0, CORPUS)
+
+import harness  # noqa: E402  (the corpus differential harness)
+
+from repro import port, rvv  # noqa: E402
+
+SWEEP = ("rvv-64", "rvv-128", "rvv-256", "rvv-512", "rvv-1024")
+
+# serving-realistic geometry: enough strips that per-loop constants
+# amortize and the width family separates
+BENCH_N, BENCH_TAIL_N = 1024, 1027
+
+# fixed-shape counter-examples: fold's cross-lane vget_high/low
+# structure and the gemm's nested dot stay at NEON granularity, so
+# their retired counts must NOT scale with VLEN
+UNSCALABLE = ("fold_halves_f32", "qs8_gemm_mx8_ukernel")
+
+
+def sweep_corpus(seed=0):
+    """Emit + simulate every corpus kernel across the width family.
+
+    Returns ``{kernel: {target: counts}}`` where counts are the
+    simulator's retired tallies; raises if any simulated output
+    diverges from the exact NumPy reference."""
+    import numpy as np
+    out = {}
+    for i, case in enumerate(harness.cases(n=BENCH_N,
+                                           tail_n=BENCH_TAIL_N)):
+        k = port.compile_file(os.path.join(CORPUS, case.file),
+                              name=case.kernel)
+        rng = np.random.default_rng(seed + i)
+        args = case.make_args(rng)
+        want = case.reference(*args)
+        rows = {}
+        for target in SWEEP:
+            got, counts = rvv.execute(rvv.emit(k, target), *args)
+            _assert_close(got, want, case, target)
+            rows[target] = {
+                "executed": counts["executed"],
+                "vector": counts["vector"],
+                "vsetvli": (counts["vsetvli"]
+                            + counts["implicit_vsetvli"]),
+                "vuops": counts["vuops"],
+            }
+        out[case.kernel] = rows
+    return out
+
+
+def _assert_close(got, want, case, target):
+    import numpy as np
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g, dtype=np.float64),
+            np.asarray(w, dtype=np.float64),
+            rtol=max(case.rtol, 1e-5), atol=max(case.atol, 1e-6),
+            err_msg=f"{case.kernel} on {target}: simulated RVV "
+                    f"diverged from the reference")
+
+
+def check(counts):
+    """Acceptance on retired facts."""
+    assert len(counts) >= 20, f"corpus shrank to {len(counts)} kernels"
+    ratios = {}
+    for name, rows in counts.items():
+        r = rows["rvv-128"]["executed"] / max(1,
+                                              rows["rvv-1024"]["executed"])
+        ratios[name] = round(r, 2)
+        if name in UNSCALABLE:
+            assert r <= 1.5, \
+                f"{name}: fixed-shape kernel's retired count moved " \
+                f"with VLEN ({r:.2f}x)"
+        else:
+            assert r >= 4.0, \
+                f"{name}: rvv-1024 retired only {r:.2f}x fewer " \
+                f"instructions than rvv-128 (want >= 4x)"
+        # wider registers never cost more retired work anywhere in the
+        # family (monotone down the sweep)
+        seq = [rows[t]["executed"] for t in SWEEP]
+        assert all(a >= b for a, b in zip(seq, seq[1:])), \
+            f"{name}: retired counts not monotone across {SWEEP}: {seq}"
+    return ratios
+
+
+def syntax_smoke():
+    """-fsyntax-only every emitted unit when an RVV compiler exists.
+
+    Returns ``(compiler, n_units)`` or ``(None, 0)`` when no toolchain
+    on PATH accepts ``-march=rv64gcv`` (the common case in CI)."""
+    cc = _find_rvv_cc()
+    if cc is None:
+        print("# rv64gcv syntax smoke: no RVV-capable compiler on "
+              "PATH; skipped")
+        return None, 0
+    n = 0
+    with tempfile.TemporaryDirectory() as td:
+        for case in harness.cases():
+            k = port.compile_file(os.path.join(CORPUS, case.file),
+                                  name=case.kernel)
+            for target in SWEEP:
+                path = os.path.join(td, f"{case.kernel}_{n}.c")
+                with open(path, "w") as f:
+                    f.write(rvv.emit(k, target).render_c())
+                subprocess.run(cc + ["-fsyntax-only", path], check=True)
+                n += 1
+    print(f"# rv64gcv syntax smoke: {n} units clean under "
+          f"{' '.join(cc)}")
+    return cc, n
+
+
+def _find_rvv_cc():
+    probes = [["clang", "--target=riscv64", "-march=rv64gcv"],
+              ["riscv64-linux-gnu-gcc", "-march=rv64gcv"],
+              ["riscv64-unknown-elf-gcc", "-march=rv64gcv"]]
+    for cc in probes:
+        if shutil.which(cc[0]) is None:
+            continue
+        with tempfile.NamedTemporaryFile("w", suffix=".c") as f:
+            f.write("#include <riscv_vector.h>\nint main(void)"
+                    "{return 0;}\n")
+            f.flush()
+            r = subprocess.run(cc + ["-fsyntax-only", f.name],
+                               capture_output=True)
+        if r.returncode == 0:
+            return cc
+    return None
+
+
+def emit_json(counts, ratios, path="BENCH_rvv_sim.json"):
+    data = {"suite": "rvv_sim_corpus",
+            "metric": "retired_instructions",
+            "sweep": list(SWEEP),
+            "n": BENCH_N,
+            "kernels": {}}
+    for name, rows in sorted(counts.items()):
+        data["kernels"][name] = {
+            "targets": {t: dict(rows[t]) for t in SWEEP},
+            "ratio_rvv128_over_rvv1024": ratios[name],
+        }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return data
+
+
+def check_regression(data, baseline_path="BENCH_rvv_sim.json"):
+    """Retired counts may not grow against the committed baseline —
+    every codegen change that adds instructions is a reviewed diff."""
+    if not os.path.exists(baseline_path):
+        print(f"# no committed {baseline_path}; skipping regression "
+              "gate")
+        return
+    with open(baseline_path) as f:
+        base = json.load(f)
+    problems = []
+    for name, krow in base.get("kernels", {}).items():
+        fresh = data["kernels"].get(name)
+        if fresh is None:
+            problems.append(f"{name}: kernel disappeared from the "
+                            "corpus")
+            continue
+        for t, row in krow.get("targets", {}).items():
+            frow = fresh["targets"].get(t)
+            if frow is None:
+                continue
+            for key in ("executed", "vuops"):
+                if frow[key] > row[key]:
+                    problems.append(
+                        f"{name}/{t}: {key} {row[key]} -> {frow[key]}")
+    if problems:
+        raise AssertionError("BENCH_rvv_sim regression vs committed "
+                             "baseline:\n  " + "\n  ".join(problems))
+    print(f"# regression gate vs {baseline_path}: OK")
+
+
+def main(json_path="BENCH_rvv_sim.json", regression=False):
+    print(f"# emitted-RVV retired-instruction sweep "
+          f"(n={BENCH_N}, differential vs NumPy references)")
+    counts = sweep_corpus()
+    ratios = check(counts)
+    print(f"#  {len(counts)} kernels match across {len(SWEEP)} widths")
+    scal = {k: v for k, v in ratios.items() if k not in UNSCALABLE}
+    lo, hi = min(scal, key=scal.get), max(scal, key=scal.get)
+    print(f"#  rvv-128/rvv-1024 retired ratio: {scal[lo]:.2f}x ({lo}) "
+          f"to {scal[hi]:.2f}x ({hi})")
+    syntax_smoke()
+    if regression:
+        # gate BEFORE overwriting the committed baseline
+        data = {"kernels": {
+            name: {"targets": {t: dict(rows[t]) for t in SWEEP},
+                   "ratio_rvv128_over_rvv1024": ratios[name]}
+            for name, rows in counts.items()}}
+        check_regression(data, baseline_path=json_path)
+    emit_json(counts, ratios, path=json_path)
+    print(f"# wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main(regression="--check" in sys.argv[1:])

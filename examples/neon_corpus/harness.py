@@ -210,6 +210,15 @@ def _ref_cmul(n, a, b, y):
     return out
 
 
+def _ref_vld3_rgbx(n, rgb, r, g, b):
+    """Packed RGB split into planes: member i of each pixel triple."""
+    ro, go, bo = r.copy(), g.copy(), b.copy()
+    ro[:n] = rgb[0:3 * n:3]
+    go[:n] = rgb[1:3 * n:3]
+    bo[:n] = rgb[2:3 * n:3]
+    return ro, go, bo
+
+
 def _ref_vmlal_dot(n, a, b, sum_buf):
     # integer accumulation is associative — exact in any order as long
     # as the int16 accumulator cannot overflow (the args builder keeps
@@ -321,6 +330,14 @@ def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
                           _rand(rng, 2 * tail_n),
                           np.zeros(2 * tail_n, F)),
              _ref_cmul),
+        Case("vld3_rgbx.c", "u8_rgbx_deinterleave_ukernel",
+             lambda rng: (tail_n,
+                          rng.integers(0, 256,
+                                       3 * tail_n).astype(np.uint8),
+                          np.zeros(tail_n, np.uint8),
+                          np.zeros(tail_n, np.uint8),
+                          np.zeros(tail_n, np.uint8)),
+             _ref_vld3_rgbx),
         Case("vmlal_dot.c", "qs8_vmlal_dot_ukernel",
              lambda rng: (tail_n,
                           rng.integers(-2, 3, tail_n).astype(np.int8),

@@ -1,0 +1,21 @@
+/* RGB -> planar deinterleave — the 3-way struct-load path: vld3q
+ * splits packed pixels into channel registers (RVV vlseg3e8.v), three
+ * vst1q writes planes.  n counts pixels; rgb holds 3n bytes.  The
+ * kernel the vld2-only frontend vetoed: VecTupleType carries N=3.   */
+#include <arm_neon.h>
+
+void u8_rgbx_deinterleave_ukernel(size_t n, const uint8_t* rgb,
+                                  uint8_t* r, uint8_t* g, uint8_t* b) {
+  for (; n >= 16; n -= 16) {
+    uint8x16x3_t v = vld3q_u8(rgb); rgb += 48;
+    vst1q_u8(r, v.val[0]); r += 16;
+    vst1q_u8(g, v.val[1]); g += 16;
+    vst1q_u8(b, v.val[2]); b += 16;
+  }
+  for (; n != 0; n -= 1) {
+    r[0] = rgb[0];
+    g[0] = rgb[1];
+    b[0] = rgb[2];
+    rgb += 3; r += 1; g += 1; b += 1;
+  }
+}

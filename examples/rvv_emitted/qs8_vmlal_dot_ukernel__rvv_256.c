@@ -1,0 +1,98 @@
+/* qs8_vmlal_dot_ukernel on rvv-256 (VLEN=256, LMUL=1)
+ * Emitted by repro.rvv.codegen from the re-tiled port IR —
+ * do not edit; regenerate via repro.rvv.emit().
+ */
+#include <math.h>
+#include <riscv_vector.h>
+#include <stdbool.h>
+#include <stddef.h>
+#include <stdint.h>
+
+void qs8_vmlal_dot_ukernel__rvv_256(int64_t n, const int8_t *a, const int8_t *b, int16_t *sum) {
+  int64_t s1 = 0;
+  size_t vl0 = __riscv_vsetvl_e16m1(8);
+  vint16m1_t v2 = __riscv_vmv_v_x_i16m1(s1, vl0);
+  size_t vl1 = __riscv_vsetvl_e16m2(32);
+  vuint16m2_t v3 = __riscv_vid_v_u16m2(vl1);
+  uint16_t s5 = 7;
+  vuint16m2_t v4 = __riscv_vand_vx_u16m2(v3, s5, vl1);
+  vint16m2_t v6 = __riscv_vrgather_vv_i16m2(__riscv_vlmul_ext_v_i16m1_i16m2(v2), v4, vl1);
+  const int8_t *p7 = a;
+  const int8_t *p8 = b;
+  vint16m2_t v9 = v6;
+  int64_t s10 = n;
+  for (;;) {
+    int64_t s11 = 32;
+    bool s12 = s10 >= s11;
+    if (!s12) break;
+    vint8m1_t v13 = __riscv_vle8_v_i8m1(p7, vl1);
+    int64_t s14 = 32;
+    const int8_t *p15 = p7 + s14;
+    vint8m1_t v16 = __riscv_vle8_v_i8m1(p8, vl1);
+    int64_t s17 = 32;
+    const int8_t *p18 = p8 + s17;
+    vint16m2_t v19 = __riscv_vwmacc_vv_i16m2(v9, v13, v16, vl1);
+    int64_t s20 = 32;
+    int64_t s21 = s10 - s20;
+    p7 = p15;
+    p8 = p18;
+    v9 = v19;
+    s10 = s21;
+  }
+  const int8_t *p22 = p7;
+  const int8_t *p23 = p8;
+  vint16m2_t v24 = v9;
+  int64_t s25 = s10;
+  int8_t s26 = 0;
+  vint8m1_t v27 = __riscv_vmv_v_x_i8m1(s26, vl1);
+  size_t vl2 = __riscv_vsetvl_e8m1(s25);
+  vint8m1_t v28 = __riscv_vle8_v_i8m1_tu(v27, p22, vl2);
+  size_t vl3 = __riscv_vsetvl_e8m1(32);
+  int64_t s29 = 32;
+  const int8_t *p30 = p22 + s29;
+  int8_t s31 = 0;
+  vint8m1_t v32 = __riscv_vmv_v_x_i8m1(s31, vl3);
+  size_t vl4 = __riscv_vsetvl_e8m1(s25);
+  vint8m1_t v33 = __riscv_vle8_v_i8m1_tu(v32, p23, vl4);
+  size_t vl5 = __riscv_vsetvl_e8m1(32);
+  int64_t s34 = 32;
+  const int8_t *p35 = p23 + s34;
+  vint16m2_t v36 = __riscv_vwmacc_vv_i16m2(v24, v28, v33, vl5);
+  int64_t s37 = 32;
+  int64_t s38 = s25 - s37;
+  int64_t s39 = s25 - s25;
+  const int8_t *p40 = p22 + s25;
+  const int8_t *p41 = p23 + s25;
+  int16_t s43 = 0;
+  vint16m1_t v44 = __riscv_vmv_s_x_i16m1(s43, vl5);
+  vint16m2_t v45 = __riscv_vredsum_vs_i16m2_i16m1(v36, v44, vl5);
+  int16_t s42 = __riscv_vmv_x_s_i16m1_i16(__riscv_vlmul_trunc_v_i16m2_i16m1(v45));
+  int16_t s46 = s42;
+  const int8_t *p47 = p40;
+  const int8_t *p48 = p41;
+  int64_t s49 = s39;
+  for (;;) {
+    int64_t s50 = 0;
+    bool s51 = s49 != s50;
+    if (!s51) break;
+    int8_t s52 = *p47;
+    int8_t s53 = *p48;
+    int8_t s54 = s52 * s53;
+    int16_t s55 = s46 + s54;
+    int64_t s56 = 1;
+    const int8_t *p57 = p47 + s56;
+    int64_t s58 = 1;
+    const int8_t *p59 = p48 + s58;
+    int64_t s60 = 1;
+    int64_t s61 = s49 - s60;
+    s46 = s55;
+    p47 = p57;
+    p48 = p59;
+    s49 = s61;
+  }
+  int16_t s62 = s46;
+  const int8_t *p63 = p47;
+  const int8_t *p64 = p48;
+  int64_t s65 = s49;
+  *sum = s62;
+}

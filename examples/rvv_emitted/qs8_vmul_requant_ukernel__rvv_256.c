@@ -1,0 +1,115 @@
+/* qs8_vmul_requant_ukernel on rvv-256 (VLEN=256, LMUL=1)
+ * Emitted by repro.rvv.codegen from the re-tiled port IR —
+ * do not edit; regenerate via repro.rvv.emit().
+ */
+#include <math.h>
+#include <riscv_vector.h>
+#include <stdbool.h>
+#include <stddef.h>
+#include <stdint.h>
+
+void qs8_vmul_requant_ukernel__rvv_256(int64_t n, const int8_t *a, const int8_t *b, int8_t *y) {
+  const int8_t *p1 = a;
+  const int8_t *p2 = b;
+  int8_t *p3 = y;
+  int64_t s4 = n;
+  size_t vl0 = __riscv_vsetvl_e8m1(32);
+  for (;;) {
+    int64_t s5 = 32;
+    bool s6 = s4 >= s5;
+    if (!s6) break;
+    vint8m1_t v7 = __riscv_vle8_v_i8m1(p1, vl0);
+    int64_t s8 = 32;
+    const int8_t *p9 = p1 + s8;
+    vint8m1_t v10 = __riscv_vle8_v_i8m1(p2, vl0);
+    int64_t s11 = 32;
+    const int8_t *p12 = p2 + s11;
+    vint16m2_t v13 = __riscv_vwmul_vv_i16m2(v7, v10, vl0);
+    int64_t s14 = 5;
+    vint8m1_t v15 = __riscv_vnclip_wx_i8m1(v13, s14, __RISCV_VXRM_RDN, vl0);
+    __riscv_vse8_v_i8m1(p3, v15, vl0);
+    int64_t s16 = 32;
+    int8_t *p17 = p3 + s16;
+    int64_t s18 = 32;
+    int64_t s19 = s4 - s18;
+    p1 = p9;
+    p2 = p12;
+    p3 = p17;
+    s4 = s19;
+  }
+  const int8_t *p20 = p1;
+  const int8_t *p21 = p2;
+  int8_t *p22 = p3;
+  int64_t s23 = s4;
+  int8_t s24 = 0;
+  vint8m1_t v25 = __riscv_vmv_v_x_i8m1(s24, vl0);
+  size_t vl1 = __riscv_vsetvl_e8m1(s23);
+  vint8m1_t v26 = __riscv_vle8_v_i8m1_tu(v25, p20, vl1);
+  size_t vl2 = __riscv_vsetvl_e8m1(32);
+  int64_t s27 = 32;
+  const int8_t *p28 = p20 + s27;
+  int8_t s29 = 0;
+  vint8m1_t v30 = __riscv_vmv_v_x_i8m1(s29, vl2);
+  size_t vl3 = __riscv_vsetvl_e8m1(s23);
+  vint8m1_t v31 = __riscv_vle8_v_i8m1_tu(v30, p21, vl3);
+  size_t vl4 = __riscv_vsetvl_e8m1(32);
+  int64_t s32 = 32;
+  const int8_t *p33 = p21 + s32;
+  vint16m2_t v34 = __riscv_vwmul_vv_i16m2(v26, v31, vl4);
+  int64_t s35 = 5;
+  vint8m1_t v36 = __riscv_vnclip_wx_i8m1(v34, s35, __RISCV_VXRM_RDN, vl4);
+  size_t vl5 = __riscv_vsetvl_e8m1(s23);
+  __riscv_vse8_v_i8m1(p22, v36, vl5);
+  int64_t s37 = 32;
+  int8_t *p38 = p22 + s37;
+  int64_t s39 = 32;
+  int64_t s40 = s23 - s39;
+  int64_t s41 = s23 - s23;
+  const int8_t *p42 = p20 + s23;
+  const int8_t *p43 = p21 + s23;
+  int8_t *p44 = p22 + s23;
+  const int8_t *p45 = p42;
+  const int8_t *p46 = p43;
+  int8_t *p47 = p44;
+  int64_t s48 = s41;
+  for (;;) {
+    int64_t s49 = 0;
+    bool s50 = s48 != s49;
+    if (!s50) break;
+    int8_t s51 = *p45;
+    int32_t s52 = (int32_t)s51;
+    int8_t s53 = *p46;
+    int32_t s54 = (int32_t)s53;
+    int32_t s55 = s52 * s54;
+    int64_t s56 = 5;
+    int32_t s57 = s55 >> s56;
+    int64_t s58 = 1;
+    const int8_t *p59 = p45 + s58;
+    int64_t s60 = 1;
+    const int8_t *p61 = p46 + s60;
+    int64_t s62 = 127;
+    bool s63 = s57 > s62;
+    int64_t s64 = 127;
+    int64_t s65 = s63 ? s64 : s57;
+    int64_t s66 = 128;
+    int64_t s67 = -s66;
+    bool s68 = s65 < s67;
+    int64_t s69 = 128;
+    int64_t s70 = -s69;
+    int64_t s71 = s68 ? s70 : s65;
+    int8_t s72 = (int8_t)s71;
+    *p47 = s72;
+    int64_t s73 = 1;
+    int8_t *p74 = p47 + s73;
+    int64_t s75 = 1;
+    int64_t s76 = s48 - s75;
+    p45 = p59;
+    p46 = p61;
+    p47 = p74;
+    s48 = s76;
+  }
+  const int8_t *p77 = p45;
+  const int8_t *p78 = p46;
+  int8_t *p79 = p47;
+  int64_t s80 = s48;
+}

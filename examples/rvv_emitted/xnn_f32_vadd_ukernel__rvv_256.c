@@ -1,0 +1,96 @@
+/* xnn_f32_vadd_ukernel on rvv-256 (VLEN=256, LMUL=1)
+ * Emitted by repro.rvv.codegen from the re-tiled port IR —
+ * do not edit; regenerate via repro.rvv.emit().
+ */
+#include <math.h>
+#include <riscv_vector.h>
+#include <stdbool.h>
+#include <stddef.h>
+#include <stdint.h>
+
+void xnn_f32_vadd_ukernel__rvv_256(int64_t n, const float *a, const float *b, float *y) {
+  const float *p1 = a;
+  const float *p2 = b;
+  float *p3 = y;
+  int64_t s4 = n;
+  size_t vl0 = __riscv_vsetvl_e32m1(8);
+  for (;;) {
+    int64_t s5 = 8;
+    bool s6 = s4 >= s5;
+    if (!s6) break;
+    vfloat32m1_t v7 = __riscv_vle32_v_f32m1(p1, vl0);
+    int64_t s8 = 8;
+    const float *p9 = p1 + s8;
+    vfloat32m1_t v10 = __riscv_vle32_v_f32m1(p2, vl0);
+    int64_t s11 = 8;
+    const float *p12 = p2 + s11;
+    vfloat32m1_t v13 = __riscv_vfadd_vv_f32m1(v7, v10, vl0);
+    __riscv_vse32_v_f32m1(p3, v13, vl0);
+    int64_t s14 = 8;
+    float *p15 = p3 + s14;
+    int64_t s16 = 8;
+    int64_t s17 = s4 - s16;
+    p1 = p9;
+    p2 = p12;
+    p3 = p15;
+    s4 = s17;
+  }
+  const float *p18 = p1;
+  const float *p19 = p2;
+  float *p20 = p3;
+  int64_t s21 = s4;
+  float s22 = 0.0f;
+  vfloat32m1_t v23 = __riscv_vfmv_v_f_f32m1(s22, vl0);
+  size_t vl1 = __riscv_vsetvl_e32m1(s21);
+  vfloat32m1_t v24 = __riscv_vle32_v_f32m1_tu(v23, p18, vl1);
+  size_t vl2 = __riscv_vsetvl_e32m1(8);
+  int64_t s25 = 8;
+  const float *p26 = p18 + s25;
+  float s27 = 0.0f;
+  vfloat32m1_t v28 = __riscv_vfmv_v_f_f32m1(s27, vl2);
+  size_t vl3 = __riscv_vsetvl_e32m1(s21);
+  vfloat32m1_t v29 = __riscv_vle32_v_f32m1_tu(v28, p19, vl3);
+  size_t vl4 = __riscv_vsetvl_e32m1(8);
+  int64_t s30 = 8;
+  const float *p31 = p19 + s30;
+  vfloat32m1_t v32 = __riscv_vfadd_vv_f32m1(v24, v29, vl4);
+  size_t vl5 = __riscv_vsetvl_e32m1(s21);
+  __riscv_vse32_v_f32m1(p20, v32, vl5);
+  int64_t s33 = 8;
+  float *p34 = p20 + s33;
+  int64_t s35 = 8;
+  int64_t s36 = s21 - s35;
+  int64_t s37 = s21 - s21;
+  const float *p38 = p18 + s21;
+  const float *p39 = p19 + s21;
+  float *p40 = p20 + s21;
+  const float *p41 = p38;
+  const float *p42 = p39;
+  float *p43 = p40;
+  int64_t s44 = s37;
+  for (;;) {
+    int64_t s45 = 0;
+    bool s46 = s44 != s45;
+    if (!s46) break;
+    float s47 = *p41;
+    float s48 = *p42;
+    float s49 = s47 + s48;
+    *p43 = s49;
+    int64_t s50 = 1;
+    const float *p51 = p41 + s50;
+    int64_t s52 = 1;
+    const float *p53 = p42 + s52;
+    int64_t s54 = 1;
+    float *p55 = p43 + s54;
+    int64_t s56 = 1;
+    int64_t s57 = s44 - s56;
+    p41 = p51;
+    p42 = p53;
+    p43 = p55;
+    s44 = s57;
+  }
+  const float *p58 = p41;
+  const float *p59 = p42;
+  float *p60 = p43;
+  int64_t s61 = s44;
+}

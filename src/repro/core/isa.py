@@ -37,7 +37,8 @@ __all__ = [
     "vld1", "vst1", "vld1m", "vst1m", "vtile", "vqadd", "vqsub",
     "vreinterpret", "vmull", "vaddl", "vsubl", "vmlal", "vmlsl",
     "vmovl", "vmovn", "vqmovn", "vqmovun", "vld2", "vst2", "vld2m",
-    "vst2m",
+    "vst2m", "vld3", "vst3", "vld3m", "vst3m", "vld4", "vst4",
+    "vld4m", "vst4m",
 ]
 
 
@@ -983,55 +984,137 @@ vqmovun = _sat_narrowing("vqmovun",
                          "single saturating narrow to unsigned (vnclipu)")
 
 
-# -- struct loads/stores (vld2/vst2 -> RVV segment loads) --------------------
+# -- struct loads/stores (vld2/vld3/vld4 -> RVV segment loads) ---------------
 #
-# ``vld2`` reads 2*lanes contiguous elements and de-interleaves them
-# into a 2-register tuple (even lanes, odd lanes); ``vst2`` is the
-# inverse.  RVV's segment instructions (vlseg2e/vsseg2e) do the whole
-# group in one instruction; without them the vector tier needs two
-# strided accesses per struct.  Pointers follow the vld1 convention:
-# (buffer, element offset), stores return the updated buffer.
+# ``vld<n>`` reads n*lanes contiguous elements and de-interleaves them
+# into an n-register tuple (lane j of member i is element n*j+i);
+# ``vst<n>`` is the inverse.  RVV's segment instructions
+# (vlseg<n>e/vsseg<n>e) do the whole group in one instruction; without
+# them the vector tier needs n strided accesses per struct.  Pointers
+# follow the vld1 convention: (buffer, element offset), stores return
+# the updated buffer.
 
-def _vld2_width(buf, offset, lanes, *_, **__):
-    # per-register width: the struct occupies two registers, each of
-    # which must map (vld2q_f32 is native on rvv-128)
-    return _strip_width(int(lanes) * jnp.dtype(buf.dtype).itemsize * 8)
-
-
-def _vld2_seg_cost(buf, offset, lanes, *_, **__):
-    from .trace import vinstrs_for
-    return vinstrs_for(2 * int(lanes), buf.dtype)
+def _interleave(*vs):
+    return jnp.stack(vs, axis=-1).reshape(len(vs) * vs[0].shape[0])
 
 
-def _vld2_strided_cost(buf, offset, lanes, *_, **__):
-    from .trace import vinstrs_for
-    return 2 * vinstrs_for(int(lanes), buf.dtype) + 2
+def _register_segment_family(n):
+    """Register vld<n>/vst<n> and the masked vld<n>m/vst<n>m forms.
+
+    All arities share one shape: the Table-2 width is *per member
+    register* (vld2q_f32 is native on rvv-128); the segment tier costs
+    one grouped access over n*lanes elements, the strided fallback n
+    accesses plus n pointer adjusts."""
+
+    def ld_width(buf, offset, lanes, *_, **__):
+        return _strip_width(int(lanes) * jnp.dtype(buf.dtype).itemsize * 8)
+
+    def ld_seg_cost(buf, offset, lanes, *_, **__):
+        from .trace import vinstrs_for
+        return vinstrs_for(n * int(lanes), buf.dtype)
+
+    def ld_strided_cost(buf, offset, lanes, *_, **__):
+        from .trace import vinstrs_for
+        return n * vinstrs_for(int(lanes), buf.dtype) + n
+
+    def ld_v(buf, offset, lanes):
+        total = n * lanes
+        if total > buf.shape[0]:
+            # zero-trip trace safety, as in _vld1_v
+            idx = jnp.clip(offset + jnp.arange(total), 0, buf.shape[0] - 1)
+            x = buf[idx]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(buf, offset, total, axis=0)
+        return tuple(x[i::n] for i in range(n))
+
+    def ld_g(buf, offset, lanes):
+        def at(i):
+            return jax.lax.dynamic_index_in_dim(buf, i, axis=0,
+                                                keepdims=False)
+        lane = jnp.arange(lanes)
+        return tuple(jax.vmap(at)(offset + n * lane + i)
+                     for i in range(n))
+
+    register(f"vld{n}", "pallas", cost=ld_seg_cost, width=ld_width,
+             doc=f"one segment load (vlseg{n}e<eew>.v)")(ld_v)
+    register(f"vld{n}", "vector", cost=ld_strided_cost, width=ld_width,
+             doc=f"{n} strided loads (vlse<eew>.v)")(ld_v)
+    register(f"vld{n}", "generic",
+             cost=lambda buf, offset, lanes, *_, **__: n * int(lanes),
+             doc="per-lane scalar gather loop")(ld_g)
+
+    def st_width(buf, offset, *vs, **__):
+        v0 = vs[0]
+        return _strip_width(int(np.prod(v0.shape) or 1) *
+                            jnp.dtype(v0.dtype).itemsize * 8)
+
+    def st_seg_cost(buf, offset, *vs, **__):
+        from .trace import vinstrs_for
+        return vinstrs_for(n * int(np.prod(vs[0].shape) or 1),
+                           vs[0].dtype)
+
+    def st_strided_cost(buf, offset, *vs, **__):
+        from .trace import vinstrs_for
+        return n * vinstrs_for(int(np.prod(vs[0].shape) or 1),
+                               vs[0].dtype) + n
+
+    def st_v(buf, offset, *vs):
+        val = _interleave(*vs[:n])
+        if val.shape[0] > buf.shape[0]:
+            return buf.at[offset + jnp.arange(val.shape[0])].set(
+                val, mode="drop")
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, offset,
+                                                   axis=0)
+
+    register(f"vst{n}", "pallas", cost=st_seg_cost, width=st_width,
+             doc=f"one segment store (vsseg{n}e<eew>.v)")(st_v)
+    register(f"vst{n}", "vector", cost=st_strided_cost, width=st_width,
+             doc=f"{n} strided stores (vsse<eew>.v)")(st_v)
+    register(f"vst{n}", "generic",
+             cost=lambda buf, offset, *vs, **__:
+             n * int(np.prod(vs[0].shape) or 1),
+             doc="per-lane scalar scatter loop")(st_v)
+
+    # masked (predicated) forms — the re-vectorizer's lane-group tail:
+    # the first ``cnt`` element *groups* are live, exactly vsetvli
+    # semantics applied to a segment access.
+
+    def ldm_v(buf, offset, lanes, cnt, fill=0):
+        lane = jnp.arange(lanes)
+        f = jnp.asarray(fill, buf.dtype)
+        return tuple(
+            jnp.where(lane < cnt,
+                      buf[jnp.clip(offset + n * lane + i, 0,
+                                   buf.shape[0] - 1)], f)
+            for i in range(n))
+
+    register(f"vld{n}m", "vector", cost=ld_seg_cost, width=ld_width,
+             doc=f"predicated segment load (vsetvli cnt; "
+                 f"vlseg{n}e<eew>.v)")(ldm_v)
+    register(f"vld{n}m", "generic",
+             cost=lambda buf, offset, lanes, cnt, fill=0, *_, **__:
+             n * int(lanes),
+             doc="per-lane guarded scalar gather loop")(ldm_v)
+
+    def stm(buf, offset, *args):
+        vs, cnt = args[:n], args[n]
+        val = _interleave(*vs)
+        pos = jnp.arange(val.shape[0])
+        idx = jnp.where(pos // n < cnt, offset + pos, buf.shape[0])
+        return buf.at[idx].set(val, mode="drop")
+
+    register(f"vst{n}m", "vector", cost=st_seg_cost, width=st_width,
+             doc=f"predicated segment store (vsetvli cnt; "
+                 f"vsseg{n}e<eew>.v)")(stm)
+    register(f"vst{n}m", "generic",
+             cost=lambda buf, offset, *vs, **__:
+             n * int(np.prod(vs[0].shape) or 1),
+             doc="per-lane guarded scalar scatter loop")(stm)
 
 
-@register("vld2", "pallas", cost=_vld2_seg_cost, width=_vld2_width,
-          doc="one segment load (vlseg2e<eew>.v)")
-@register("vld2", "vector", cost=_vld2_strided_cost, width=_vld2_width,
-          doc="two strided loads (vlse<eew>.v)")
-def _vld2_v(buf, offset, lanes):
-    total = 2 * lanes
-    if total > buf.shape[0]:
-        # zero-trip trace safety, as in _vld1_v
-        idx = jnp.clip(offset + jnp.arange(total), 0, buf.shape[0] - 1)
-        x = buf[idx]
-    else:
-        x = jax.lax.dynamic_slice_in_dim(buf, offset, total, axis=0)
-    return x[0::2], x[1::2]
-
-
-@register("vld2", "generic", cost=lambda buf, offset, lanes, *_, **__:
-          2 * int(lanes), doc="per-lane scalar gather loop")
-def _vld2_g(buf, offset, lanes):
-    def at(i):
-        return jax.lax.dynamic_index_in_dim(buf, i, axis=0,
-                                            keepdims=False)
-    lane = jnp.arange(lanes)
-    return (jax.vmap(at)(offset + 2 * lane),
-            jax.vmap(at)(offset + 2 * lane + 1))
+for _n in (2, 3, 4):
+    _register_segment_family(_n)
+del _n
 
 
 def vld2(buf, offset, lanes):
@@ -1040,69 +1123,9 @@ def vld2(buf, offset, lanes):
     return dispatch("vld2", buf, offset, lanes)
 
 
-def _vst2_width(buf, offset, v0, v1, *_, **__):
-    return _strip_width(int(np.prod(v0.shape) or 1) *
-                        jnp.dtype(v0.dtype).itemsize * 8)
-
-
-def _vst2_seg_cost(buf, offset, v0, v1, *_, **__):
-    from .trace import vinstrs_for
-    return vinstrs_for(2 * int(np.prod(v0.shape) or 1), v0.dtype)
-
-
-def _vst2_strided_cost(buf, offset, v0, v1, *_, **__):
-    from .trace import vinstrs_for
-    return 2 * vinstrs_for(int(np.prod(v0.shape) or 1), v0.dtype) + 2
-
-
-def _interleave(v0, v1):
-    return jnp.stack([v0, v1], axis=-1).reshape(2 * v0.shape[0])
-
-
-@register("vst2", "pallas", cost=_vst2_seg_cost, width=_vst2_width,
-          doc="one segment store (vsseg2e<eew>.v)")
-@register("vst2", "vector", cost=_vst2_strided_cost, width=_vst2_width,
-          doc="two strided stores (vsse<eew>.v)")
-def _vst2_v(buf, offset, v0, v1):
-    val = _interleave(v0, v1)
-    if val.shape[0] > buf.shape[0]:
-        return buf.at[offset + jnp.arange(val.shape[0])].set(
-            val, mode="drop")
-    return jax.lax.dynamic_update_slice_in_dim(buf, val, offset, axis=0)
-
-
-@register("vst2", "generic", cost=lambda buf, offset, v0, v1, *_, **__:
-          2 * int(np.prod(v0.shape) or 1),
-          doc="per-lane scalar scatter loop")
-def _vst2_g(buf, offset, v0, v1):
-    return _vst2_v(buf, offset, v0, v1)
-
-
 def vst2(buf, offset, v0, v1):
     """Interleaving struct store; returns the updated buffer."""
     return dispatch("vst2", buf, offset, v0, v1)
-
-
-# masked (predicated) struct forms — the re-vectorizer's lane-group
-# tail: the first ``cnt`` element *groups* (pairs) are live, exactly
-# vsetvli semantics applied to a segment access.
-
-@register("vld2m", "vector", cost=_vld2_seg_cost, width=_vld2_width,
-          doc="predicated segment load (vsetvli cnt; vlseg2e<eew>.v)")
-def _vld2m_v(buf, offset, lanes, cnt, fill=0):
-    lane = jnp.arange(lanes)
-    i0 = jnp.clip(offset + 2 * lane, 0, buf.shape[0] - 1)
-    i1 = jnp.clip(offset + 2 * lane + 1, 0, buf.shape[0] - 1)
-    f = jnp.asarray(fill, buf.dtype)
-    return (jnp.where(lane < cnt, buf[i0], f),
-            jnp.where(lane < cnt, buf[i1], f))
-
-
-@register("vld2m", "generic", cost=lambda buf, offset, lanes, cnt,
-          fill=0, *_, **__: 2 * int(lanes),
-          doc="per-lane guarded scalar gather loop")
-def _vld2m_g(buf, offset, lanes, cnt, fill=0):
-    return _vld2m_v(buf, offset, lanes, cnt, fill)
 
 
 def vld2m(buf, offset, lanes, cnt, fill=0):
@@ -1111,21 +1134,50 @@ def vld2m(buf, offset, lanes, cnt, fill=0):
     return dispatch("vld2m", buf, offset, lanes, cnt, fill)
 
 
-@register("vst2m", "vector", cost=_vst2_seg_cost, width=_vst2_width,
-          doc="predicated segment store (vsetvli cnt; vsseg2e<eew>.v)")
-@register("vst2m", "generic", cost=lambda buf, offset, v0, v1, cnt,
-          *_, **__: 2 * int(np.prod(v0.shape) or 1),
-          doc="per-lane guarded scalar scatter loop")
-def _vst2m(buf, offset, v0, v1, cnt):
-    val = _interleave(v0, v1)
-    pos = jnp.arange(val.shape[0])
-    idx = jnp.where(pos // 2 < cnt, offset + pos, buf.shape[0])
-    return buf.at[idx].set(val, mode="drop")
-
-
 def vst2m(buf, offset, v0, v1, cnt):
     """Masked :func:`vst2`: stores the first ``cnt`` element pairs."""
     return dispatch("vst2m", buf, offset, v0, v1, cnt)
+
+
+def vld3(buf, offset, lanes):
+    """3-way de-interleaving struct load (vlseg3e): lane j of member i
+    is element ``offset + 3*j + i``."""
+    return dispatch("vld3", buf, offset, lanes)
+
+
+def vst3(buf, offset, v0, v1, v2):
+    """3-way interleaving struct store; returns the updated buffer."""
+    return dispatch("vst3", buf, offset, v0, v1, v2)
+
+
+def vld3m(buf, offset, lanes, cnt, fill=0):
+    """Masked :func:`vld3`: first ``cnt`` element triples active."""
+    return dispatch("vld3m", buf, offset, lanes, cnt, fill)
+
+
+def vst3m(buf, offset, v0, v1, v2, cnt):
+    """Masked :func:`vst3`: stores the first ``cnt`` element triples."""
+    return dispatch("vst3m", buf, offset, v0, v1, v2, cnt)
+
+
+def vld4(buf, offset, lanes):
+    """4-way de-interleaving struct load (vlseg4e)."""
+    return dispatch("vld4", buf, offset, lanes)
+
+
+def vst4(buf, offset, v0, v1, v2, v3):
+    """4-way interleaving struct store; returns the updated buffer."""
+    return dispatch("vst4", buf, offset, v0, v1, v2, v3)
+
+
+def vld4m(buf, offset, lanes, cnt, fill=0):
+    """Masked :func:`vld4`: first ``cnt`` element quads active."""
+    return dispatch("vld4m", buf, offset, lanes, cnt, fill)
+
+
+def vst4m(buf, offset, v0, v1, v2, v3, cnt):
+    """Masked :func:`vst4`: stores the first ``cnt`` element quads."""
+    return dispatch("vst4m", buf, offset, v0, v1, v2, v3, cnt)
 
 
 @register("vtbl", "generic", cost=scalar_cost(2), doc="per-lane table lookup")
@@ -1140,3 +1192,186 @@ def _vtbl_v(table, idx):
 
 def vtbl(table, idx):
     return dispatch("vtbl", table, idx)
+
+
+# ---------------------------------------------------------------------------
+# RVV codegen metadata (consumed by repro.rvv.codegen)
+# ---------------------------------------------------------------------------
+#
+# Per logical-ISA op: the real RVV mnemonic expansion the code generator
+# emits, keyed by the operand's dtype class ("int" / "uint" / "float").
+# Each entry is the *retired-instruction* sequence for one issue of the
+# op (vsetvli toggles around predicated sites are accounted separately
+# by the emitter).  ``shape`` documents the operand form.  This table is
+# the single source of truth: repro.rvv.codegen refuses to emit a
+# mnemonic that is not listed here, and DESIGN.md §12's supported-
+# instruction table is generated from it.
+#
+# Width-changing families operate at the *narrow* SEW with a 2x-EMUL
+# wide operand (the RVV widening/narrowing convention); segment loads
+# and stores retire a single vlseg<n>e/vsseg<n>e instruction.
+
+RVV_MNEMONICS = {
+    # simple arithmetic / logic (Listing 8: the vector tier maps 1:1)
+    "vadd":  {"shape": "vv", "int": ("vadd.vv",), "uint": ("vadd.vv",),
+              "float": ("vfadd.vv",)},
+    "vsub":  {"shape": "vv", "int": ("vsub.vv",), "uint": ("vsub.vv",),
+              "float": ("vfsub.vv",)},
+    "vmul":  {"shape": "vv", "int": ("vmul.vv",), "uint": ("vmul.vv",),
+              "float": ("vfmul.vv",)},
+    "vmax":  {"shape": "vv", "int": ("vmax.vv",), "uint": ("vmaxu.vv",),
+              "float": ("vfmax.vv",)},
+    "vmin":  {"shape": "vv", "int": ("vmin.vv",), "uint": ("vminu.vv",),
+              "float": ("vfmin.vv",)},
+    "vand":  {"shape": "vv", "int": ("vand.vv",), "uint": ("vand.vv",)},
+    "vorr":  {"shape": "vv", "int": ("vor.vv",), "uint": ("vor.vv",)},
+    "veor":  {"shape": "vv", "int": ("vxor.vv",), "uint": ("vxor.vv",)},
+    # saturating add/sub: the fixed-point ops (vxrm does not matter at
+    # shift 0, but vsadd/vssub saturate exactly like vqadd/vqsub)
+    "vqadd": {"shape": "vv", "int": ("vsadd.vv",), "uint": ("vsaddu.vv",)},
+    "vqsub": {"shape": "vv", "int": ("vssub.vv",), "uint": ("vssubu.vv",)},
+    # multiply-accumulate (vd overlays the accumulator operand)
+    "vmla":  {"shape": "vvv", "int": ("vmacc.vv",), "uint": ("vmacc.vv",),
+              "float": ("vfmacc.vv",)},
+    "vmls":  {"shape": "vvv", "int": ("vnmsac.vv",),
+              "uint": ("vnmsac.vv",), "float": ("vfnmsac.vv",)},
+    "vfma":  {"shape": "vvv", "float": ("vfmacc.vv",)},
+    # immediate shifts
+    "vshl_n": {"shape": "vx", "int": ("vsll.vx",), "uint": ("vsll.vx",)},
+    "vshr_n": {"shape": "vx", "int": ("vsra.vx",), "uint": ("vsrl.vx",)},
+    # compares: paper Listing 6 — build zeros, compare to a mask
+    # register, merge all-ones under the mask
+    "vceq": {"shape": "vv->umask", "int": ("vmv.v.x", "vmseq.vv",
+             "vmerge.vxm"), "uint": ("vmv.v.x", "vmseq.vv",
+             "vmerge.vxm"), "float": ("vmv.v.x", "vmfeq.vv",
+             "vmerge.vxm")},
+    "vcgt": {"shape": "vv->umask", "int": ("vmv.v.x", "vmslt.vv",
+             "vmerge.vxm"), "uint": ("vmv.v.x", "vmsltu.vv",
+             "vmerge.vxm"), "float": ("vmv.v.x", "vmflt.vv",
+             "vmerge.vxm")},
+    "vcge": {"shape": "vv->umask", "int": ("vmv.v.x", "vmsle.vv",
+             "vmerge.vxm"), "uint": ("vmv.v.x", "vmsleu.vv",
+             "vmerge.vxm"), "float": ("vmv.v.x", "vmfle.vv",
+             "vmerge.vxm")},
+    "vclt": {"shape": "vv->umask", "int": ("vmv.v.x", "vmslt.vv",
+             "vmerge.vxm"), "uint": ("vmv.v.x", "vmsltu.vv",
+             "vmerge.vxm"), "float": ("vmv.v.x", "vmflt.vv",
+             "vmerge.vxm")},
+    "vcle": {"shape": "vv->umask", "int": ("vmv.v.x", "vmsle.vv",
+             "vmerge.vxm"), "uint": ("vmv.v.x", "vmsleu.vv",
+             "vmerge.vxm"), "float": ("vmv.v.x", "vmfle.vv",
+             "vmerge.vxm")},
+    # lane-select: mask-register compare + merge (2 instrs, cheaper
+    # than the cost model's 3-op bitwise estimate — the executed column
+    # flags the divergence)
+    "vbsl": {"shape": "vvv", "int": ("vmsne.vx", "vmerge.vvm"),
+             "uint": ("vmsne.vx", "vmerge.vvm"),
+             "float": ("vmsne.vx", "vmerge.vvm")},
+    # broadcast / register moves
+    "vdup": {"shape": "x", "int": ("vmv.v.x",), "uint": ("vmv.v.x",),
+             "float": ("vfmv.v.f",)},
+    "vtile": {"shape": "v", "int": ("vid.v", "vand.vx", "vrgather.vv"),
+              "uint": ("vid.v", "vand.vx", "vrgather.vv"),
+              "float": ("vid.v", "vand.vx", "vrgather.vv")},
+    # register rearrangement (paper Listing 5)
+    "vget_high": {"shape": "v", "int": ("vslidedown.vx",),
+                  "uint": ("vslidedown.vx",),
+                  "float": ("vslidedown.vx",)},
+    "vget_low": {"shape": "v", "int": ("vmv.v.v",), "uint": ("vmv.v.v",),
+                 "float": ("vmv.v.v",)},
+    "vcombine": {"shape": "vv", "int": ("vmv.v.v", "vslideup.vx"),
+                 "uint": ("vmv.v.v", "vslideup.vx"),
+                 "float": ("vmv.v.v", "vslideup.vx")},
+    # bit reverse (paper Listing 7: binary magic numbers, 15 instrs)
+    "vrbit": {"shape": "v",
+              "int": ("vsrl.vi", "vand.vx", "vand.vx", "vsll.vi",
+                      "vor.vv") * 3,
+              "uint": ("vsrl.vi", "vand.vx", "vand.vx", "vsll.vi",
+                       "vor.vv") * 3},
+    # reciprocal ladder: exact-division forms so the simulator matches
+    # the logical ISA bit-for-bit (the logical vrecpe *is* 1/x)
+    "vrecpe": {"shape": "v", "float": ("vfrdiv.vf",)},
+    "vrecps": {"shape": "vv", "float": ("vfmul.vv", "vfrsub.vf")},
+    "vrsqrte": {"shape": "v", "float": ("vfsqrt.v", "vfrdiv.vf")},
+    "vrsqrts": {"shape": "vv", "float": ("vfmul.vv", "vfrsub.vf",
+                                         "vfmul.vf")},
+    # horizontal reductions (scalar init in element 0 of a scratch)
+    "vaddv": {"shape": "v->x", "int": ("vmv.s.x", "vredsum.vs",
+              "vmv.x.s"), "uint": ("vmv.s.x", "vredsum.vs", "vmv.x.s"),
+              "float": ("vfmv.s.f", "vfredosum.vs", "vfmv.f.s")},
+    "vmaxv": {"shape": "v->x", "int": ("vmv.x.s", "vmv.s.x",
+              "vredmax.vs", "vmv.x.s"),
+              "uint": ("vmv.x.s", "vmv.s.x", "vredmaxu.vs", "vmv.x.s"),
+              "float": ("vfmv.f.s", "vfmv.s.f", "vfredmax.vs",
+                        "vfmv.f.s")},
+    "vminv": {"shape": "v->x", "int": ("vmv.x.s", "vmv.s.x",
+              "vredmin.vs", "vmv.x.s"),
+              "uint": ("vmv.x.s", "vmv.s.x", "vredminu.vs", "vmv.x.s"),
+              "float": ("vfmv.f.s", "vfmv.s.f", "vfredmin.vs",
+                        "vfmv.f.s")},
+    # conversions
+    "vcvt": {"shape": "v", "f->i": ("vfcvt.rtz.x.f.v",),
+             "i->f": ("vfcvt.f.x.v",), "f->u": ("vfcvt.rtz.xu.f.v",),
+             "u->f": ("vfcvt.f.xu.v",)},
+    "vmovl": {"shape": "v", "int": ("vsext.vf2",),
+              "uint": ("vzext.vf2",)},
+    "vmovn": {"shape": "w", "int": ("vnsra.wi",), "uint": ("vnsrl.wi",)},
+    "vqmovn": {"shape": "w", "int": ("vnclip.wi",),
+               "uint": ("vnclipu.wi",)},
+    "vqmovun": {"shape": "w", "int": ("vmax.vx", "vnclipu.wi")},
+    # widening arithmetic (narrow SEW, 2x-EMUL destination)
+    "vmull": {"shape": "vv", "int": ("vwmul.vv",),
+              "uint": ("vwmulu.vv",)},
+    "vaddl": {"shape": "vv", "int": ("vwadd.vv",),
+              "uint": ("vwaddu.vv",)},
+    "vsubl": {"shape": "vv", "int": ("vwsub.vv",),
+              "uint": ("vwsubu.vv",)},
+    "vmlal": {"shape": "vvv", "int": ("vwmacc.vv",),
+              "uint": ("vwmaccu.vv",)},
+    "vmlsl": {"shape": "vvv", "int": ("vwmul.vv", "vsub.vv"),
+              "uint": ("vwmulu.vv", "vsub.vv")},
+    # memory (unit-stride + segment families; masked forms reuse the
+    # same access instruction under a cnt-element vsetvli, plus one
+    # vmv.v.x building the tail-undisturbed fill register for loads)
+    "vld1":  {"shape": "p", "any": ("vle<eew>.v",)},
+    "vst1":  {"shape": "pv", "any": ("vse<eew>.v",)},
+    "vld1m": {"shape": "p+cnt", "any": ("vmv.v.x", "vle<eew>.v",)},
+    "vst1m": {"shape": "pv+cnt", "any": ("vse<eew>.v",)},
+    "vld2":  {"shape": "p", "any": ("vlseg2e<eew>.v",)},
+    "vst2":  {"shape": "pt", "any": ("vsseg2e<eew>.v",)},
+    "vld2m": {"shape": "p+cnt", "any": ("vmv.v.x", "vlseg2e<eew>.v",)},
+    "vst2m": {"shape": "pt+cnt", "any": ("vsseg2e<eew>.v",)},
+    "vld3":  {"shape": "p", "any": ("vlseg3e<eew>.v",)},
+    "vst3":  {"shape": "pt", "any": ("vsseg3e<eew>.v",)},
+    "vld3m": {"shape": "p+cnt", "any": ("vmv.v.x", "vlseg3e<eew>.v",)},
+    "vst3m": {"shape": "pt+cnt", "any": ("vsseg3e<eew>.v",)},
+    "vld4":  {"shape": "p", "any": ("vlseg4e<eew>.v",)},
+    "vst4":  {"shape": "pt", "any": ("vsseg4e<eew>.v",)},
+    "vld4m": {"shape": "p+cnt", "any": ("vmv.v.x", "vlseg4e<eew>.v",)},
+    "vst4m": {"shape": "pt+cnt", "any": ("vsseg4e<eew>.v",)},
+    # free in the register file (no retired instruction)
+    "vreinterpret": {"shape": "v", "any": ()},
+    # scalar extract: slide the lane down, then move to x
+    "vget_lane": {"shape": "v->x", "int": ("vslidedown.vx", "vmv.x.s"),
+                  "uint": ("vslidedown.vx", "vmv.x.s"),
+                  "float": ("vslidedown.vx", "vfmv.f.s")},
+    # the fused requantization peephole: single-use vshr_n feeding a
+    # saturating narrow collapses into one rounding narrow (RDN matches
+    # C's arithmetic shift exactly); vqmovun keeps its vmax clamp
+    "vshr_n+vqmovn": {"shape": "wx", "int": ("vnclip.wx",),
+                      "uint": ("vnclipu.wx",)},
+    "vshr_n+vqmovun": {"shape": "wx", "int": ("vmax.vx",
+                                              "vnclipu.wx")},
+}
+
+
+def rvv_mnemonics(isa_op: str, dclass: str):
+    """The RVV mnemonic expansion for one issue of ``isa_op`` on a
+    ``dclass`` ("int"/"uint"/"float") operand, or None when the op has
+    no registered RVV lowering (repro.rvv.codegen then raises)."""
+    entry = RVV_MNEMONICS.get(isa_op)
+    if entry is None:
+        return None
+    if "any" in entry:
+        return entry["any"]
+    return entry.get(dclass)

@@ -371,15 +371,15 @@ class _Tracer:
                                 cnt, ins.attrs.get("fill", 0))
         elif kind == "store2":
             buf, off = env[ins.args[0]]
-            v0, v1 = env[ins.args[1]]
-            out = self.dispatch(isa_op, self.memory[buf], off, v0, v1)
+            vs = env[ins.args[1]]
+            out = self.dispatch(isa_op, self.memory[buf], off, *vs)
             self.memory[buf] = out
             return
         elif kind == "store2_masked":
             buf, off = env[ins.args[0]]
-            v0, v1 = env[ins.args[1]]
+            vs = env[ins.args[1]]
             cnt = env[ins.args[2]]
-            out = self.dispatch(isa_op, self.memory[buf], off, v0, v1,
+            out = self.dispatch(isa_op, self.memory[buf], off, *vs,
                                 cnt)
             self.memory[buf] = out
             return

@@ -66,9 +66,9 @@ _SCALAR_NAMES = {
     "size_t": "size_t", "void": "void",
 }
 
-# plain registers (float32x4_t) and 2-register structs (float32x4x2_t,
-# the vld2/vst2 result type — NEON's only struct types in the subset)
-_VEC_RE = re.compile(r"^(u?int|float)(8|16|32|64)x(\d+)(x2)?_t$")
+# plain registers (float32x4_t) and multi-register structs
+# (float32x4x2_t .. x4 — the vld2/vld3/vld4 result types)
+_VEC_RE = re.compile(r"^(u?int|float)(8|16|32|64)x(\d+)(x[234])?_t$")
 
 
 def is_type_name(text: str) -> bool:

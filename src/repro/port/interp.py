@@ -374,13 +374,13 @@ class Machine:
             buf, off = env[ins.args[0]]
             tup = (abstract_reg(ins.args[1].type) if self.abstract
                    else env[ins.args[1]])
-            args = [self.memory[buf], _as_np_index(off), tup[0], tup[1]]
+            args = [self.memory[buf], _as_np_index(off), *tup]
         elif kind == "store2_masked":
             buf, off = env[ins.args[0]]
             tup = (abstract_reg(ins.args[1].type) if self.abstract
                    else env[ins.args[1]])
             cnt = env[ins.args[2]]
-            args = [self.memory[buf], _as_np_index(off), tup[0], tup[1],
+            args = [self.memory[buf], _as_np_index(off), *tup,
                     _as_np_index(cnt)]
         else:
             raise ExecError(f"unknown intrinsic kind {kind!r}")

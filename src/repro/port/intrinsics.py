@@ -242,24 +242,28 @@ def _resolve(name: str) -> Optional[IntrinSpec]:  # noqa: C901
         q, d = _vt(dt, True), _vt(out, False)
         return IntrinSpec(name, f"v{m.group(1)}", "cvt", (q,), d, q.bits)
 
-    # vld2[q] — de-interleaving struct load (RVV vlseg2e<eew>).  The
-    # Table-2 width is *per register*: the struct occupies two
-    # registers, each of which must map (vld2q is native on rvv-128).
-    m = re.match(r"^vld2(q?)_([a-z0-9]+)$", name)
-    if m and m.group(2) in _ELEM:
-        dt = _ELEM[m.group(2)]
-        v = _vt(dt, m.group(1) == "q")
-        t = VecTupleType((v, v))
-        return IntrinSpec(name, "vld2", "load2", (PtrType(dt),), t,
+    # vld2/vld3/vld4[q] — de-interleaving struct load (RVV
+    # vlseg<n>e<eew>).  The Table-2 width is *per register*: the struct
+    # occupies n registers, each of which must map (vld2q is native on
+    # rvv-128).  The kind stays "load2" for every arity ("segment
+    # load"); the member count travels in the tuple type and the isa_op.
+    m = re.match(r"^vld([234])(q?)_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        n = int(m.group(1))
+        dt = _ELEM[m.group(3)]
+        v = _vt(dt, m.group(2) == "q")
+        t = VecTupleType((v,) * n)
+        return IntrinSpec(name, f"vld{n}", "load2", (PtrType(dt),), t,
                           v.bits)
 
-    # vst2[q] — interleaving struct store (RVV vsseg2e<eew>)
-    m = re.match(r"^vst2(q?)_([a-z0-9]+)$", name)
-    if m and m.group(2) in _ELEM:
-        dt = _ELEM[m.group(2)]
-        v = _vt(dt, m.group(1) == "q")
-        t = VecTupleType((v, v))
-        return IntrinSpec(name, "vst2", "store2", (PtrType(dt), t),
+    # vst2/vst3/vst4[q] — interleaving struct store (RVV vsseg<n>e<eew>)
+    m = re.match(r"^vst([234])(q?)_([a-z0-9]+)$", name)
+    if m and m.group(3) in _ELEM:
+        n = int(m.group(1))
+        dt = _ELEM[m.group(3)]
+        v = _vt(dt, m.group(2) == "q")
+        t = VecTupleType((v,) * n)
+        return IntrinSpec(name, f"vst{n}", "store2", (PtrType(dt), t),
                           None, v.bits)
 
     # vbsl[q] — mask select: (umask, a, b)

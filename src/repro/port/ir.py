@@ -178,18 +178,18 @@ _TUPLE_RE = re.compile(r"^([a-z0-9]+x\d+)x(\d+)_t$")
 def is_vec_tuple_name(name: str) -> bool:
     m = _TUPLE_RE.match(name)
     return bool(m) and f"{m.group(1)}_t" in NEON_TYPES and \
-        m.group(2) == "2"
+        m.group(2) in ("2", "3", "4")
 
 
 def vec_tuple_type(name: str) -> VecTupleType:
-    """'float32x4x2_t' -> VecTupleType of two float32x4_t registers."""
+    """'float32x4x3_t' -> VecTupleType of three float32x4_t registers."""
     m = _TUPLE_RE.match(name)
     if not m or f"{m.group(1)}_t" not in NEON_TYPES:
         raise KeyError(f"not a NEON multi-register struct type: {name!r}")
-    if m.group(2) != "2":
-        raise KeyError(f"{name!r}: only 2-tuple register structs are in "
-                       f"the subset (vld2/vst2)")
-    return VecTupleType((VecType(f"{m.group(1)}_t"),) * 2)
+    if m.group(2) not in ("2", "3", "4"):
+        raise KeyError(f"{name!r}: only 2/3/4-tuple register structs are "
+                       f"in the subset (vld2/vld3/vld4)")
+    return VecTupleType((VecType(f"{m.group(1)}_t"),) * int(m.group(2)))
 
 
 # ---------------------------------------------------------------------------

@@ -457,7 +457,7 @@ class _Lowerer:
                                "kind": spec.kind,
                                "width_bits": spec.width_bits,
                                "_line": getattr(e, "line", 0)}))
-        if spec.kind == "store":
+        if spec.kind in ("store", "store2"):
             ptr = args[0]
             if ptr.type.const:
                 raise LowerError(f"{spec.name}: store through const "

@@ -28,7 +28,8 @@ def report(kernel, *example_args,
            sweep: Sequence[str] = PORT_SWEEP,
            policy: str = "pallas",
            baseline_policy: Optional[str] = "vector",
-           compiled: bool = False) -> Dict:
+           compiled: bool = False,
+           executed: bool = False) -> Dict:
     """Per-intrinsic migration report for ``kernel`` on ``example_args``.
 
     ``kernel`` is a :class:`repro.port.PortedKernel`; the example args
@@ -42,6 +43,18 @@ def report(kernel, *example_args,
     finally *diverges* across the RVV family: the fixed-width port costs
     the same from rvv-128 to rvv-1024, the re-tiled one shrinks with the
     register.
+
+    ``executed=True`` adds the instruction-level fact-check: the kernel
+    is run through real RVV codegen (:mod:`repro.rvv`) and the emitted
+    instruction stream executes on the in-repo simulator, so each
+    target row gains ``executed`` — *retired* dynamic instructions
+    (vector + vsetvli), the LMUL-weighted ``vuops``, and a
+    per-intrinsic comparison against the cost model's re-tiled
+    estimate with divergences flagged.  Estimates charge LMUL micro-ops
+    per grouped issue while the machine retires one instruction per
+    mnemonic, so a flagged divergence is not an error — it is the gap
+    the executed column exists to expose (e.g. ``vbsl`` estimates 3
+    bitwise ops but retires a 2-instruction mask+merge).
     """
     fn = kernel.fn
     sites: Dict[str, Dict] = {}
@@ -73,12 +86,14 @@ def report(kernel, *example_args,
             row["baseline_total_instrs"] = base["total_instrs"]
             row["speedup"] = round(
                 base["total_instrs"] / max(1, est["total_instrs"]), 3)
-        if compiled:
+        rv = None
+        if compiled or executed:
             from .interp import Machine
             from .revec import retile
             res = retile(fn, tgt)
             rv = Machine(res.fn, policy=policy, target=tgt,
                          abstract=True).run(*example_args)
+        if compiled:
             row["revec"] = {
                 "factor": res.factor,
                 "effective_vlen": tgt.effective_vlen,
@@ -88,6 +103,27 @@ def report(kernel, *example_args,
                 "scalar_instrs": rv["scalar_instrs"],
                 "speedup_vs_fixed": round(
                     est["total_instrs"] / max(1, rv["total_instrs"]), 3),
+            }
+        if executed:
+            from repro import rvv
+            prog = rvv.emit(kernel, tgt)
+            _, counts = rvv.run(prog, *example_args, with_counts=True)
+            per = {}
+            names = set(counts["per_site"]) | set(rv["per_intrinsic"])
+            for name in sorted(names):
+                retired = counts["per_site"].get(name, 0)
+                estimate = rv["per_intrinsic"].get(name, {}).get(
+                    "instrs", 0)
+                per[name] = {"executed": retired,
+                             "revec_instrs": estimate,
+                             "diverges": retired != estimate}
+            row["executed"] = {
+                "total": counts["executed"],
+                "vector": counts["vector"],
+                "vsetvli": (counts["vsetvli"] +
+                            counts["implicit_vsetvli"]),
+                "vuops": counts["vuops"],
+                "per_intrinsic": per,
             }
         out["targets"][tname] = row
     return out
@@ -136,4 +172,15 @@ def format_report(rep: Dict) -> str:
             fac += f" {str(r['factor']) + 'x/' + str(r['masked']):>10s}"
         lines.append(rv)
         lines.append(fac)
+    if all("executed" in rep["targets"][t] for t in tnames):
+        ex = f"{'executed (RVV sim, retired)':40s}"
+        uo = f"{'  vuops / diverging intrinsics':40s}"
+        for t in tnames:
+            r = rep["targets"][t]["executed"]
+            ndiv = sum(1 for p in r["per_intrinsic"].values()
+                       if p["diverges"])
+            ex += f" {r['total']:>10d}"
+            uo += f" {str(r['vuops']) + '/' + str(ndiv):>10s}"
+        lines.append(ex)
+        lines.append(uo)
     return "\n".join(lines)

@@ -74,7 +74,8 @@ _SCALABLE = {
     "vrbit", "vrev64", "vreinterpret",
     "vmull", "vaddl", "vsubl", "vmlal", "vmlsl", "vmovl", "vmovn",
     "vqmovn", "vqmovun",
-    "vld2", "vst2", "tuple_get", "tuple_set", "tuple_undef",
+    "vld2", "vst2", "vld3", "vst3", "vld4", "vst4",
+    "tuple_get", "tuple_set", "tuple_undef",
 }
 # post-loop reduction consumers a widened accumulator may flow into
 _REDUCERS = {"vaddv", "vmaxv", "vminv"}
@@ -491,9 +492,11 @@ class _Retiler:
             elif kind == "store":
                 consumed = ins.args[1].type.lanes
             elif kind == "load2":
-                consumed = 2 * ins.result.type.lanes
-            else:                                # store2
-                consumed = 2 * ins.args[1].type.lanes
+                consumed = (len(ins.result.type.elems) *
+                            ins.result.type.lanes)
+            else:                                # store2 (segment)
+                consumed = (len(ins.args[1].type.elems) *
+                            ins.args[1].type.lanes)
             if not isinstance(a, Affine) or root_step is None:
                 self.notes.append(
                     f"{name}: memory access is not rooted at a "
@@ -647,7 +650,8 @@ class _Retiler:
         """Per memory site, (scale, div): the site's pointer advances
         ``scale`` elements per counter element, and the site packs
         ``div`` consecutive elements into each register lane (1 for
-        unit-stride vld1/vst1, 2 for de-interleaving vld2/vst2).  A
+        unit-stride vld1/vst1, the segment arity n for de-interleaving
+        vld<n>/vst<n>).  A
         masked site's per-register active count is cnt * scale / div."""
         syms: Dict[Value, object] = {p: Affine(p, 0)
                                      for p in strip.loop.phis}
@@ -664,8 +668,13 @@ class _Retiler:
                  if isinstance(a, Affine) else None)
             if d is None:
                 continue           # unreachable after check_memory_sites
-            out[ins] = (d // strip.step,
-                        2 if kind in ("load2", "store2") else 1)
+            if kind == "load2":
+                div = len(ins.result.type.elems)
+            elif kind == "store2":
+                div = len(ins.args[1].type.elems)
+            else:
+                div = 1
+            out[ins] = (d // strip.step, div)
         return out
 
     # -- widened main loop -------------------------------------------------
@@ -843,14 +852,16 @@ class _Retiler:
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]"})
                     out.args = (out.args[0], out.args[1], site_cnt(ins))
                 elif kind == "load2":
+                    seg = len(ins.result.type.elems)
                     out = self.widen_intrin(ins, factor, override={
-                        "kind": "load2_masked", "isa_op": "vld2m",
+                        "kind": "load2_masked", "isa_op": f"vld{seg}m",
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]",
                         "fill": fills.get(id(ins), 0)})
                     out.args = (out.args[0], site_cnt(ins))
                 elif kind == "store2":
+                    seg = len(ins.args[1].type.elems)
                     out = self.widen_intrin(ins, factor, override={
-                        "kind": "store2_masked", "isa_op": "vst2m",
+                        "kind": "store2_masked", "isa_op": f"vst{seg}m",
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]"})
                     out.args = (out.args[0], out.args[1], site_cnt(ins))
                 else:

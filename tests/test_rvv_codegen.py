@@ -1,0 +1,180 @@
+"""repro.rvv differential conformance: every corpus kernel is emitted
+as real RVV intrinsic C, executed on the in-repo instruction simulator,
+and proven bitwise-equal (ints) / tolerance-equal (floats) to the exact
+NumPy reference across the width family and adversarial tail lengths.
+
+The compiled==interp==reference chain is already closed by
+test_port_conformance.py; here the new edge is emitted-RVV-on-simulator
+against the same references, plus the retired-instruction facts the
+cost model can only estimate."""
+import os
+import sys
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(ROOT, "examples", "neon_corpus")
+GOLDEN_DIR = os.path.join(ROOT, "examples", "rvv_emitted")
+sys.path.insert(0, CORPUS)
+
+import harness  # noqa: E402
+
+from repro import port, rvv  # noqa: E402
+
+SWEEP = ("rvv-64", "rvv-128", "rvv-512", "rvv-1024")
+CASES = {c.kernel: c for c in harness.cases()}
+
+# kernels whose geometry is driven by harness's tail_n (scalar-tail
+# kernels); the strip-only rest are covered by the main differential
+TAIL_KERNELS = (
+    "xnn_f32_vadd_ukernel", "xnn_f32_vmul_ukernel",
+    "xnn_f32_vclamp_ukernel", "xnn_f32_vdot_ukernel",
+    "qs8_vaddsub_biased_ukernel", "reduce_max_f32",
+    "qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
+    "s8_shl1_widen_narrow_ukernel", "cmul_f32_ukernel",
+    "u8_rgbx_deinterleave_ukernel", "qs8_vmlal_dot_ukernel",
+)
+
+
+@lru_cache(maxsize=None)
+def _kernel(name):
+    case = CASES[name]
+    return port.compile_file(os.path.join(CORPUS, case.file),
+                             name=case.kernel)
+
+
+def _tuple(x):
+    return x if isinstance(x, tuple) else (x,)
+
+
+def _assert_matches(got, want, case, ctx):
+    got, want = _tuple(got), _tuple(want)
+    assert len(got) == len(want), f"{ctx}: arity {len(got)} != {len(want)}"
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.dtype == w.dtype, f"{ctx}: dtype {g.dtype} != {w.dtype}"
+        if g.dtype.kind in "iu":
+            np.testing.assert_array_equal(g, w, err_msg=ctx)
+        else:
+            np.testing.assert_allclose(g, w, rtol=case.rtol,
+                                       atol=case.atol, err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole bar: emitted RVV on the simulator == exact reference,
+# for every corpus kernel, across the width family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target", SWEEP)
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_emitted_rvv_matches_reference(name, target):
+    case = CASES[name]
+    args = case.make_args(np.random.default_rng(0))
+    prog = rvv.emit(_kernel(name), target)
+    out, counts = rvv.execute(prog, *args)
+    _assert_matches(out, case.reference(*args), case,
+                    f"{name} on {target}")
+    assert counts["executed"] > 0
+    assert counts["executed"] == (counts["vector"] + counts["vsetvli"]
+                                  + counts["implicit_vsetvli"])
+    # every emitted unit opens its strips with a real vsetvli
+    c = prog.render_c()
+    assert "__riscv_vsetvl_e" in c
+    assert "#include <riscv_vector.h>" in c
+
+
+@pytest.mark.parametrize("name", ["xnn_f32_vadd_ukernel",
+                                  "qs8_vmul_requant_ukernel",
+                                  "u8_rgbx_deinterleave_ukernel"])
+def test_sim_matches_interpreter(name):
+    # three-way closure on representative kernels: simulator output ==
+    # the logical-ISA interpreter's (reference equality is proven above)
+    case = CASES[name]
+    args = case.make_args(np.random.default_rng(1))
+    k = _kernel(name)
+    out, _ = rvv.execute(rvv.emit(k, "rvv-128"), *args)
+    _assert_matches(out, k(*args, target="rvv-128"), case,
+                    f"{name}: sim vs interp")
+
+
+# ---------------------------------------------------------------------------
+# adversarial tails: n in {0, 1, K-1, K, K+1} around the re-tiled strip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target,K", [("rvv-64", 16), ("rvv-1024", 256)])
+def test_adversarial_tails(target, K):
+    for t in (0, 1, K - 1, K, K + 1):
+        for case in harness.cases(n=64, tail_n=t):
+            if case.kernel not in TAIL_KERNELS:
+                continue
+            if case.kernel == "reduce_max_f32" and t == 0:
+                # an empty max has no identity: the kernel's own
+                # reference (and the interpreter) reject n=0 too
+                continue
+            args = case.make_args(np.random.default_rng(2 + t))
+            out, _ = rvv.execute(rvv.emit(_kernel(case.kernel), target),
+                                 *args)
+            _assert_matches(out, case.reference(*args), case,
+                            f"{case.kernel} on {target}, tail n={t}")
+
+
+# ---------------------------------------------------------------------------
+# retired-instruction facts: the scalable kernels must actually shrink
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["xnn_f32_vadd_ukernel",
+                                  "qs8_vmlal_dot_ukernel",
+                                  "qs8_vmul_requant_ukernel"])
+def test_executed_scales_with_vlen(name):
+    case = {c.kernel: c for c in harness.cases(n=1024,
+                                               tail_n=1024)}[name]
+    args = case.make_args(np.random.default_rng(3))
+    k = _kernel(name)
+    executed = {}
+    for target in ("rvv-128", "rvv-1024"):
+        out, counts = rvv.execute(rvv.emit(k, target), *args)
+        _assert_matches(out, case.reference(*args), case,
+                        f"{name} on {target} at n=1024")
+        executed[target] = counts["executed"]
+    ratio = executed["rvv-128"] / max(1, executed["rvv-1024"])
+    assert ratio >= 4.0, \
+        f"{name}: rvv-1024 retired only {ratio:.2f}x fewer than rvv-128"
+
+
+def test_counts_reconcile_with_revec_estimate():
+    # port.report(executed=True) joins retired counts to the cost
+    # model's revec_instrs and flags per-intrinsic divergence
+    case = CASES["xnn_f32_vadd_ukernel"]
+    args = case.make_args(np.random.default_rng(4))
+    rep = port.report(_kernel(case.kernel), *args,
+                      sweep=("rvv-128", "rvv-1024"), executed=True)
+    for tgt in ("rvv-128", "rvv-1024"):
+        row = rep["targets"][tgt]["executed"]
+        assert row["total"] > 0
+        per = row["per_intrinsic"]
+        assert per, f"{tgt}: empty per-intrinsic join"
+        for label, cell in per.items():
+            assert set(cell) == {"executed", "revec_instrs", "diverges"}
+            assert cell["diverges"] == (cell["executed"]
+                                        != cell["revec_instrs"])
+
+
+# ---------------------------------------------------------------------------
+# golden emitted units: codegen drift is a reviewed diff, not a silent one
+# ---------------------------------------------------------------------------
+
+GOLDEN = ("xnn_f32_vadd_ukernel", "qs8_vmlal_dot_ukernel",
+          "qs8_vmul_requant_ukernel")
+
+
+@pytest.mark.parametrize("name", GOLDEN)
+def test_golden_emitted_c(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}__rvv_256.c")
+    with open(path) as f:
+        want = f.read()
+    got = rvv.emit(_kernel(name), "rvv-256").render_c()
+    assert got == want, \
+        f"{name}: emitted C drifted from {os.path.relpath(path, ROOT)} " \
+        f"— regenerate via rvv.emit(k, 'rvv-256').render_c() and review"

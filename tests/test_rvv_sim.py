@@ -1,0 +1,255 @@
+"""Simulator-semantics tests: the architectural behaviors the NumPy
+reference can't check — vsetvli vl computation, tail policies on
+predicated accesses, and vxrm rounding for the narrowing clips."""
+import numpy as np
+import pytest
+
+from repro.core.targets import resolve_target
+from repro.port.ir import PtrType
+from repro.rvv.codegen import RvvProgram, V, VSetVL
+from repro.rvv.sim import RvvSim, SimError, _garbage, _roundoff
+
+
+def _prog(target, body, params=(), writes=()):
+    return RvvProgram(fn_name="t", target=resolve_target(target),
+                      params=list(params), writes=list(writes),
+                      body=list(body))
+
+
+# ---------------------------------------------------------------------------
+# vsetvli: vl = min(AVL, VLMAX), VLMAX = LMUL * VLEN / SEW
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vlen", [64, 128, 256, 512, 1024])
+@pytest.mark.parametrize("lmul", [1, 2, 4, 8])
+@pytest.mark.parametrize("sew", [8, 16, 32])
+def test_vsetvli_vl_every_config(vlen, lmul, sew):
+    vlmax = lmul * vlen // sew
+    sim = RvvSim(_prog(f"rvv-{vlen}",
+                       [VSetVL("vl0", 10**9, sew, lmul)]))
+    sim.run()
+    assert sim.vl == vlmax
+    assert sim.env["vl0"] == vlmax
+    assert sim.counts()["vsetvli"] == 1
+
+    sim = RvvSim(_prog(f"rvv-{vlen}",
+                       [VSetVL("vl0", vlmax - 1, sew, lmul)]))
+    sim.run()
+    assert sim.vl == vlmax - 1
+
+
+def test_vector_op_before_vsetvli_rejected():
+    st = V(mnem="vadd.vv", dst="v1", srcs=(("v", "v0"), ("v", "v0")),
+           dtype="int32", sew=32, emul=1, vl="vl0")
+    sim = RvvSim(_prog("rvv-128", [st]))
+    with pytest.raises(SimError, match="before any vsetvli"):
+        sim.run()
+
+
+def test_vl_exceeding_vlmax_rejected():
+    # vsetvli grants vl=8 at e8m1 (VLEN=64); an e32m1 op can only hold
+    # 2 elements — a real machine would have needed m4
+    body = [VSetVL("vl0", 8, 8, 1),
+            V(mnem="vmv.v.x", dst="v1", srcs=(("x", "z"),),
+              dtype="int32", sew=32, emul=1, vl="vl0")]
+    sim = RvvSim(_prog("rvv-64", body))
+    sim.env["z"] = 0
+    with pytest.raises(SimError, match="exceeds VLMAX"):
+        sim._block(body)
+
+
+def test_implicit_vsetvli_charged_on_sew_switch():
+    # widening chains switch SEW at constant vl: the compiler-inserted
+    # vsetvli retires even though the C carries none
+    body = [VSetVL("vl0", 4, 8, 1),
+            V(mnem="vmv.v.x", dst="v1", srcs=(("x", "z"),),
+              dtype="int8", sew=8, emul=1, vl="vl0"),
+            V(mnem="vsext.vf2", dst="v2", srcs=(("v", "v1"),),
+              dtype="int16", dtype_src="int8", sew=16, emul=1,
+              vl="vl0")]
+    sim = RvvSim(_prog("rvv-128", body))
+    sim.env["z"] = 5
+    sim._block(body)
+    c = sim.counts()
+    assert c["vsetvli"] == 1
+    assert c["implicit_vsetvli"] == 1
+    assert c["executed"] == 4          # 2 retired vector + 2 vsetvli
+    np.testing.assert_array_equal(sim.env["v2"][:4],
+                                  np.full(4, 5, np.int16))
+
+
+# ---------------------------------------------------------------------------
+# tail policy: agnostic fills garbage, undisturbed merges
+# ---------------------------------------------------------------------------
+
+def _store_prog(policy, merge):
+    params = [("p", PtrType("int32", False))]
+    body = [
+        VSetVL("vl0", 4, 32, 1),
+        V(mnem="vmv.v.x", dst="vfill", srcs=(("x", "f"),),
+          dtype="int32", sew=32, emul=1, vl="vl0"),
+        VSetVL("vl1", 2, 32, 1),
+        V(mnem="vmv.v.x", dst="vdat", srcs=(("x", "d"),),
+          dtype="int32", sew=32, emul=1, vl="vl1",
+          policy=policy, merge=merge),
+        VSetVL("vl2", 4, 32, 1),
+        V(mnem="vse", dst=None, srcs=(("p", "p"), ("v", "vdat")),
+          dtype="int32", sew=32, emul=1, vl="vl2"),
+    ]
+    return _prog("rvv-128", body, params, writes=["p"])
+
+
+def test_tail_agnostic_fills_adversarial_garbage():
+    # the register written at vl=2 is stored at vl=4: agnostic tail
+    # lanes must read as all-ones, never as stale zeros
+    sim = RvvSim(_store_prog("ta", None))
+    sim.env["f"], sim.env["d"] = 7, 9
+    out = sim.run(np.zeros(4, np.int32))
+    np.testing.assert_array_equal(out, [9, 9, -1, -1])
+
+
+def test_tail_undisturbed_keeps_merge_lanes():
+    sim = RvvSim(_store_prog("tu", "vfill"))
+    sim.env["f"], sim.env["d"] = 7, 9
+    out = sim.run(np.zeros(4, np.int32))
+    np.testing.assert_array_equal(out, [9, 9, 7, 7])
+
+
+def test_masked_store_only_writes_cnt_lanes():
+    # predicated stores run at vl=cnt: lanes past cnt stay untouched
+    params = [("p", PtrType("int32", False))]
+    body = [
+        VSetVL("vl0", 4, 32, 1),
+        V(mnem="vmv.v.x", dst="v1", srcs=(("x", "d"),),
+          dtype="int32", sew=32, emul=1, vl="vl0"),
+        VSetVL("vl1", 3, 32, 1),
+        V(mnem="vse", dst=None, srcs=(("p", "p"), ("v", "v1")),
+          dtype="int32", sew=32, emul=1, vl="vl1"),
+    ]
+    sim = RvvSim(_prog("rvv-128", body, params, writes=["p"]))
+    sim.env["d"] = 5
+    out = sim.run(np.full(4, 100, np.int32))
+    np.testing.assert_array_equal(out, [5, 5, 5, 100])
+
+
+def test_garbage_pattern_is_all_ones():
+    g = _garbage(4, "int16")
+    np.testing.assert_array_equal(g, np.full(4, -1, np.int16))
+    assert np.isnan(_garbage(2, "float32")).all()
+
+
+# ---------------------------------------------------------------------------
+# vxrm rounding for vnclip/vnclipu
+# ---------------------------------------------------------------------------
+
+def _roundoff_ref(v, d, mode):
+    """Spec pseudo-code, one scalar at a time."""
+    if d == 0:
+        return v
+    if mode == "rnu":
+        r = (v >> (d - 1)) & 1
+    elif mode == "rne":
+        lsb = (v >> (d - 1)) & 1
+        rest = v & ((1 << (d - 1)) - 1)
+        r = lsb & int(rest != 0 or ((v >> d) & 1) != 0)
+    elif mode == "rdn":
+        r = 0
+    else:                             # rod
+        r = int(((v >> d) & 1) == 0 and (v & ((1 << d) - 1)) != 0)
+    return (v >> d) + r
+
+
+@pytest.mark.parametrize("mode", ["rnu", "rne", "rdn", "rod"])
+@pytest.mark.parametrize("d", [1, 2, 5])
+def test_roundoff_matches_spec(mode, d):
+    vals = np.arange(-130, 130, dtype=np.int64)
+    got = _roundoff(vals, d, mode)
+    want = np.array([_roundoff_ref(int(v), d, mode) for v in vals])
+    np.testing.assert_array_equal(got, want)
+
+
+def _nclip_prog(mnem, shamt, vxrm, wide_dt, narrow_dt):
+    body = [
+        VSetVL("vl0", 4, _sew_of(narrow_dt), 1),
+        V(mnem=mnem, dst="vn", srcs=(("v", "vw"), ("i", shamt)),
+          dtype=narrow_dt, dtype_src=wide_dt,
+          sew=_sew_of(narrow_dt), emul=1, vl="vl0", vxrm=vxrm),
+    ]
+    return _prog("rvv-128", body)
+
+
+def _sew_of(dt):
+    return np.dtype(dt).itemsize * 8
+
+
+@pytest.mark.parametrize("mode", ["rnu", "rne", "rdn", "rod"])
+def test_vnclip_rounds_then_saturates(mode):
+    wide = np.array([1000, -1000, 32767, -32768], np.int16)
+    sim = RvvSim(_nclip_prog("vnclip.wi", 3, mode, "int16", "int8"))
+    sim.env["vw"] = wide.copy()
+    sim._block(sim.prog.body)
+    want = np.clip(
+        [_roundoff_ref(int(v), 3, mode) for v in wide], -128, 127
+    ).astype(np.int8)
+    np.testing.assert_array_equal(sim.env["vn"][:4], want)
+    assert sim.counts()["scalar"] == (1 if mode != "rnu" else 0)
+
+
+@pytest.mark.parametrize("mode", ["rnu", "rdn"])
+def test_vnclipu_rounds_then_saturates(mode):
+    wide = np.array([7, 8, 9, 65535], np.uint16)
+    sim = RvvSim(_nclip_prog("vnclipu.wi", 3, mode, "uint16", "uint8"))
+    sim.env["vw"] = wide.copy()
+    sim._block(sim.prog.body)
+    want = np.clip(
+        [_roundoff_ref(int(v), 3, mode) for v in wide], 0, 255
+    ).astype(np.uint8)
+    np.testing.assert_array_equal(sim.env["vn"][:4], want)
+
+
+def test_vxrm_is_sticky_csr():
+    # two clips at the same mode: only the first retires a CSR write
+    body = (_nclip_prog("vnclip.wi", 1, "rod", "int16", "int8").body +
+            _nclip_prog("vnclip.wi", 1, "rod", "int16", "int8").body)
+    sim = RvvSim(_prog("rvv-128", body))
+    sim.env["vw"] = np.array([1, 2, 3, 4], np.int16)
+    sim._block(body)
+    assert sim.counts()["scalar"] == 1
+
+
+# ---------------------------------------------------------------------------
+# segment loads/stores
+# ---------------------------------------------------------------------------
+
+def test_vlseg3_deinterleaves_and_vsseg3_interleaves():
+    params = [("src", PtrType("uint8", True)),
+              ("dst", PtrType("uint8", False))]
+    body = [
+        VSetVL("vl0", 4, 8, 1),
+        V(mnem="vlseg", dst=("a", "b", "c"), srcs=(("p", "src"),),
+          dtype="uint8", sew=8, emul=1, vl="vl0", seg=3),
+        V(mnem="vsseg", dst=None,
+          srcs=(("p", "dst"), ("vt", ("c", "b", "a"))),
+          dtype="uint8", sew=8, emul=1, vl="vl0", seg=3),
+    ]
+    sim = RvvSim(_prog("rvv-128", body, params, writes=["dst"]))
+    src = np.arange(12, dtype=np.uint8)
+    out = sim.run(src, np.zeros(12, np.uint8))
+    np.testing.assert_array_equal(sim.env["a"][:4], [0, 3, 6, 9])
+    np.testing.assert_array_equal(sim.env["b"][:4], [1, 4, 7, 10])
+    np.testing.assert_array_equal(sim.env["c"][:4], [2, 5, 8, 11])
+    want = np.stack([sim.env["c"][:4], sim.env["b"][:4],
+                     sim.env["a"][:4]], axis=-1).ravel()
+    np.testing.assert_array_equal(out, want)
+    # one retired instruction per segment access, not per field
+    assert sim.counts()["vector"] == 2
+
+
+def test_segment_access_out_of_bounds_rejected():
+    params = [("src", PtrType("uint8", True))]
+    body = [VSetVL("vl0", 4, 8, 1),
+            V(mnem="vlseg", dst=("a", "b", "c"), srcs=(("p", "src"),),
+              dtype="uint8", sew=8, emul=1, vl="vl0", seg=3)]
+    sim = RvvSim(_prog("rvv-128", body, params))
+    with pytest.raises(SimError, match="outside"):
+        sim.run(np.zeros(11, np.uint8))     # needs 12
