@@ -1,0 +1,271 @@
+"""Resilience benchmark: what a fault costs, and what it must never cost.
+
+The degradation ladder (:mod:`repro.port.resilience`) promises that a
+fault at any pipeline seam only trades *speed*, never *values*.  This
+suite injects each fault class (:mod:`repro.port.faultinject`) into
+real ladder runs and measures
+
+* **fallback rate** — fraction of faulted runs that served from a lower
+  rung, which must exactly match the class's expected rate (a veto or a
+  persistent compile failure always degrades; a transient timeout, an
+  eviction storm, or a corrupted cache entry never does), and
+* **recovery latency** — wall time of the faulted ladder run vs the
+  fault-free baseline, per class (informational: how much the fallback
+  rung costs).
+
+The ``--check`` gate enforces the structural invariants: **zero silent
+corruption** (every faulted output bitwise-equal to the fault-free run
+of the rung that served it), expected-rung match rate 1.0, and every
+degraded run leaving a DegradationRecord.
+
+  PYTHONPATH=src python benchmarks/resilience_suite.py           # writes BENCH_resilience.json
+  PYTHONPATH=src python benchmarks/resilience_suite.py --check   # + invariant gate
+  PYTHONPATH=src python benchmarks/resilience_suite.py --check --quick   # CI subset (no rewrite)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(ROOT, "examples", "neon_corpus")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro import port  # noqa: E402
+from repro.port import faultinject as fi  # noqa: E402
+from repro.port import resilience as rz  # noqa: E402
+
+KERNELS = {
+    "xnn_f32_vadd_ukernel": "vadd.c",       # elementwise strip
+    "xnn_f32_vdot_ukernel": "vdot.c",       # reduction
+    "qs8_vmlal_dot_ukernel": "vmlal_dot.c",  # widening MACC
+}
+TARGETS = ("rvv-128", "rvv-1024")
+N = 61
+REPEATS = 3
+
+# fault class -> (seam, error, times, expected rung, expected degraded)
+FAULT_CLASSES = {
+    "revec_veto": ("revec.retile", "RevecVeto", None, "compiled", True),
+    "compile_fail": ("compile.trace", "CompileError", None, "interp",
+                     True),
+    "runtime_fault": ("compile.run", "ExecError", None, "interp", True),
+    "transient_timeout": ("compile.trace", "CompileTimeout", 1,
+                          "compiled+revec", False),
+    "eviction_storm": (None, None, None, "compiled+revec", False),
+    "corrupted_cache": (None, None, None, "compiled+revec", False),
+}
+
+
+def _load_kernels(names):
+    return {name: port.compile_file(os.path.join(CORPUS, fname),
+                                    name=name)
+            for name, fname in KERNELS.items() if name in names}
+
+
+def _args_for(kernel, rng):
+    n = N
+    if kernel.name == "qs8_vmlal_dot_ukernel":
+        return (n, rng.integers(-2, 3, n).astype(np.int8),
+                rng.integers(-2, 3, n).astype(np.int8),
+                np.zeros(1, np.int16))
+    out_len = 1 if kernel.name == "xnn_f32_vdot_ukernel" else n
+    return (n, rng.standard_normal(n).astype(np.float32),
+            rng.standard_normal(n).astype(np.float32),
+            np.zeros(out_len, np.float32))
+
+
+def _bitwise_equal(got, want):
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    return len(got) == len(want) and all(
+        np.array_equal(np.asarray(g), np.asarray(w))
+        for g, w in zip(got, want))
+
+
+def _timed_ladder(kernel, args, target, repeats=REPEATS):
+    best, out, rec = None, None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out, rec = rz.run_resilient(kernel, *args, target=target,
+                                    jit=False)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return out, rec, best * 1e3
+
+
+def _run_class(cls, kernel, args, target, refs):
+    """One faulted ladder run per class; first-recovery latency is the
+    interesting number, so the cache is cleared before injection for
+    compile-seam classes."""
+    seam, err_name, times, want_rung, want_degraded = FAULT_CLASSES[cls]
+    rz.reset_resilience()
+    if cls == "eviction_storm":
+        with fi.eviction_storm(1):
+            out, rec, ms = _timed_ladder(kernel, args, target)
+    elif cls == "corrupted_cache":
+        port.compiled_cache_clear()
+        kernel.compile(target=target, revec=True, jit=False)
+        fi.corrupt_cache_entry(kernel.fn.name)
+        t0 = time.perf_counter()
+        out, rec = rz.run_resilient(kernel, *args, target=target,
+                                    jit=False)
+        ms = (time.perf_counter() - t0) * 1e3
+    else:
+        port.compiled_cache_clear()
+        with fi.injected(seam, error=getattr(rz, err_name),
+                         times=times):
+            t0 = time.perf_counter()
+            out, rec = rz.run_resilient(kernel, *args, target=target,
+                                        jit=False)
+            ms = (time.perf_counter() - t0) * 1e3
+    corrupt = not _bitwise_equal(out, refs[rec.used])
+    recorded = (not rec.degraded) or bool(
+        rz.degradation_records(kernel=kernel.fn.name))
+    return {
+        "used": rec.used,
+        "degraded": rec.degraded,
+        "rung_ok": rec.used == want_rung,
+        "degraded_ok": rec.degraded == want_degraded,
+        "corrupt": corrupt,
+        "recorded": recorded,
+        "recovery_ms": round(ms, 3),
+    }
+
+
+def bench(kernels, targets=TARGETS, classes=None):
+    classes = classes or tuple(FAULT_CLASSES)
+    rows = {}
+    for kname, kernel in kernels.items():
+        args = _args_for(kernel, np.random.default_rng(0))
+        for tgt in targets:
+            port.compiled_cache_clear()
+            rz.reset_resilience()
+            # fault-free per-rung references + baseline latency
+            out, rec, base_ms = _timed_ladder(kernel, args, tgt)
+            refs = {
+                "compiled+revec": out,
+                "compiled": kernel.compile(target=tgt, revec=False,
+                                           jit=False)(*args),
+                "interp": kernel(*args, target=tgt),
+            }
+            for cls in classes:
+                row = _run_class(cls, kernel, args, tgt, refs)
+                row["baseline_ms"] = round(base_ms, 3)
+                rows[f"{cls}|{kname}|{tgt}"] = row
+    return rows
+
+
+def aggregate(rows):
+    per_class = {}
+    for key, row in rows.items():
+        cls = key.split("|")[0]
+        agg = per_class.setdefault(cls, {
+            "runs": 0, "fallbacks": 0, "corruptions": 0,
+            "rung_mismatches": 0, "unrecorded": 0, "recovery_ms": []})
+        agg["runs"] += 1
+        agg["fallbacks"] += int(row["degraded"])
+        agg["corruptions"] += int(row["corrupt"])
+        agg["rung_mismatches"] += int(not (row["rung_ok"] and
+                                           row["degraded_ok"]))
+        agg["unrecorded"] += int(not row["recorded"])
+        agg["recovery_ms"].append(row["recovery_ms"])
+    out = {}
+    for cls, agg in per_class.items():
+        lat = np.asarray(agg["recovery_ms"])
+        out[cls] = {
+            "runs": agg["runs"],
+            "fallback_rate": round(agg["fallbacks"] / agg["runs"], 3),
+            "expected_fallback_rate": float(
+                FAULT_CLASSES[cls][4]),
+            "corruptions": agg["corruptions"],
+            "rung_mismatches": agg["rung_mismatches"],
+            "unrecorded": agg["unrecorded"],
+            "recovery_p50_ms": round(float(np.median(lat)), 3),
+            "recovery_max_ms": round(float(lat.max()), 3),
+        }
+    return out
+
+
+def check(summary):
+    """The resilience contract, as hard gates."""
+    problems = []
+    for cls, agg in summary.items():
+        if agg["corruptions"]:
+            problems.append(f"{cls}: {agg['corruptions']} silently "
+                            f"corrupted outputs")
+        if agg["rung_mismatches"]:
+            problems.append(f"{cls}: {agg['rung_mismatches']} runs "
+                            f"served from an unexpected rung")
+        if agg["fallback_rate"] != agg["expected_fallback_rate"]:
+            problems.append(
+                f"{cls}: fallback rate {agg['fallback_rate']} != "
+                f"expected {agg['expected_fallback_rate']}")
+        if agg["unrecorded"]:
+            problems.append(f"{cls}: {agg['unrecorded']} degraded runs "
+                            f"left no DegradationRecord")
+    if problems:
+        raise AssertionError("resilience contract violated:\n  " +
+                             "\n  ".join(problems))
+    print("# resilience gate: zero corruption, all rungs as expected")
+
+
+def emit_json(rows, summary, path="BENCH_resilience.json"):
+    data = {
+        "suite": "resilience",
+        "metric": "fallback_rate_and_recovery_latency",
+        "targets": list(TARGETS),
+        "fault_classes": {
+            cls: {"seam": spec[0], "error": spec[1],
+                  "expected_rung": spec[3]}
+            for cls, spec in FAULT_CLASSES.items()},
+        "rows": {k: rows[k] for k in sorted(rows)},
+        "per_class": summary,
+        "ladder_stats": rz.resilience_stats(),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return path
+
+
+def main(json_path="BENCH_resilience.json", regression=False,
+         quick=False):
+    global TARGETS
+    if quick:
+        # CI subset: one kernel x one target still runs every fault
+        # class through every gate
+        TARGETS = ("rvv-128",)
+        names = ("xnn_f32_vadd_ukernel",)
+    else:
+        names = tuple(KERNELS)
+    kernels = _load_kernels(names)
+    fi.disarm_all()
+    rz.reset_resilience()
+
+    print(f"# fault classes {tuple(FAULT_CLASSES)} x kernels "
+          f"{tuple(kernels)} x targets {TARGETS}")
+    rows = bench(kernels, targets=TARGETS)
+    summary = aggregate(rows)
+    for cls, agg in sorted(summary.items()):
+        print(f"{cls:20s} fallback {agg['fallback_rate']:>4.0%} "
+              f"(want {agg['expected_fallback_rate']:.0%})  "
+              f"recovery p50 {agg['recovery_p50_ms']:>9.3f}ms  "
+              f"corrupt {agg['corruptions']}")
+    if regression:
+        check(summary)
+    if quick:
+        print("# quick mode: baseline not rewritten")
+        return summary
+    tmp = emit_json(rows, summary, path=json_path + ".tmp")
+    os.replace(tmp, json_path)
+    print(f"# wrote {json_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    main(regression="--check" in sys.argv[1:],
+         quick="--quick" in sys.argv[1:])

@@ -25,7 +25,8 @@ import os
 import threading
 from typing import Dict, Optional
 
-from . import cparse, intrinsics, interp, ir, lower, revec
+from . import cparse, faultinject, intrinsics, interp, ir, lower, revec
+from . import resilience
 from .cparse import ParseError, parse
 from .compile import CompileError, compile_fn
 from .interp import ExecError, Machine
@@ -34,6 +35,12 @@ from .ir import TFunction
 from .lower import LowerError, lower_function
 from .report import PORT_SWEEP, format_report
 from .report import report as _report
+from .resilience import (
+    CacheCorruption, CompileTimeout, DeadlineExceeded, DegradationRecord,
+    LadderExhausted, PortError, RevecVeto, SimError,
+    degradation_records, resilience_stats, reset_resilience,
+    run_resilient,
+)
 from .revec import RetileResult, retile
 
 __all__ = [
@@ -44,6 +51,11 @@ __all__ = [
     "compiled_cache_clear",
     "ParseError", "LowerError", "ExecError", "UnknownIntrinsic",
     "CompileError", "RetileResult",
+    # resilience layer
+    "PortError", "RevecVeto", "SimError", "CompileTimeout",
+    "CacheCorruption", "DeadlineExceeded", "LadderExhausted",
+    "DegradationRecord", "run_resilient", "degradation_records",
+    "resilience_stats", "reset_resilience", "resilience", "faultinject",
 ]
 
 
@@ -64,17 +76,38 @@ class _CompiledKernelCache:
     Eviction only forgets the cache's reference: holders of an evicted
     CompiledKernel keep a working callable; the next ``compile`` call
     for that key re-traces.
+
+    Concurrency: all bookkeeping runs under one RLock, and builds are
+    *single-flight* — the first thread to miss a key traces it (outside
+    the lock; compilation is slow and reentrant) while racers park on a
+    per-key Event and pick up the stored result, so a concurrent
+    ``warmup`` compiles each executable exactly once.  Every hit is
+    validated against its key (kernel identity, target, policy,
+    revec/jit flags); a corrupted entry is dropped, counted, and
+    transparently recompiled instead of being served.
     """
 
     DEFAULT_CAPACITY = 256
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY):
         self._cache: "collections.OrderedDict" = collections.OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
+        self._inflight: Dict[tuple, threading.Event] = {}
         self._capacity = int(capacity)
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._corruptions = 0
+
+    @staticmethod
+    def _validate(key, hit) -> bool:
+        return (isinstance(hit, CompiledKernel)
+                and not getattr(hit, "_corrupted", False)
+                and hit.source_kernel is key[0]
+                and hit.target == key[1]
+                and hit.policy == key[2]
+                and bool(hit.revec) == key[3]
+                and bool(getattr(hit, "jit", key[4])) == key[4])
 
     def get(self, kernel: "PortedKernel", *, target=None,
             policy: Optional[str] = "pallas", revec: bool = False,
@@ -84,36 +117,59 @@ class _CompiledKernelCache:
         # PortedKernel hashes by identity; keeping it in the key also
         # keeps it alive for as long as its compiled variants are cached.
         key = (kernel, tgt, policy, bool(revec), bool(jit))
-        with self._lock:
-            hit = self._cache.get(key)
-            if hit is not None:
-                self._hits += 1
-                self._cache.move_to_end(key)
-                return hit
-        # Trace outside the lock: compilation is slow and reentrant
-        # (dispatch may consult the registry LRU).  A racing thread may
-        # compile the same key; first store wins, the loser's trace is
-        # discarded (correct either way — both pin the same Target).
-        compiled = CompiledKernel(kernel, target=tgt, policy=policy,
-                                  revec=revec, jit=jit)
-        with self._lock:
-            again = self._cache.get(key)
-            if again is not None:
-                self._hits += 1
-                self._cache.move_to_end(key)
-                return again
-            self._misses += 1
-            self._cache[key] = compiled
-            while len(self._cache) > self._capacity:
-                self._cache.popitem(last=False)
-                self._evictions += 1
-        return compiled
+        while True:
+            with self._lock:
+                hit = self._cache.get(key)
+                if hit is not None:
+                    hit = faultinject.corrupt_value(
+                        "cache.entry", hit, kernel=kernel.fn.name,
+                        target=tgt.name)
+                    if self._validate(key, hit):
+                        self._hits += 1
+                        self._cache.move_to_end(key)
+                        return hit
+                    # Poisoned entry: never serve it — drop, count,
+                    # and fall through to a fresh build.
+                    self._corruptions += 1
+                    self._cache.pop(key, None)
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    building = True
+                else:
+                    building = False
+            if not building:
+                # Another thread is tracing this key; wait and re-check.
+                # If its build raised, the loop elects a new builder.
+                ev.wait(timeout=300.0)
+                continue
+            try:
+                compiled = CompiledKernel(kernel, target=tgt,
+                                          policy=policy, revec=revec,
+                                          jit=jit)
+            except BaseException:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                ev.set()
+                raise
+            with self._lock:
+                self._misses += 1
+                self._cache[key] = compiled
+                while len(self._cache) > self._capacity:
+                    self._cache.popitem(last=False)
+                    self._evictions += 1
+                self._inflight.pop(key, None)
+            ev.set()
+            return compiled
 
     def cache_info(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self._hits, "misses": self._misses,
                     "size": len(self._cache), "capacity": self._capacity,
-                    "evictions": self._evictions}
+                    "evictions": self._evictions,
+                    "corruptions": self._corruptions,
+                    "inflight": len(self._inflight)}
 
     def set_capacity(self, n: int) -> None:
         if n < 1:
@@ -128,6 +184,7 @@ class _CompiledKernelCache:
         with self._lock:
             self._cache.clear()
             self._hits = self._misses = self._evictions = 0
+            self._corruptions = 0
 
 
 _COMPILED_CACHE = _CompiledKernelCache()
@@ -208,6 +265,19 @@ class PortedKernel:
         return _COMPILED_CACHE.get(self, target=target, policy=policy,
                                    revec=revec, jit=jit)
 
+    def run_resilient(self, *args, target=None,
+                      policy: Optional[str] = "pallas", revec: bool = True,
+                      jit: bool = True, deadline_s: Optional[float] = None,
+                      compile_retries: int = 1):
+        """Execute down the degradation ladder (compiled+revec ->
+        compiled -> interpreter); returns ``(result,
+        DegradationRecord)``.  See :func:`repro.port.resilience.
+        run_resilient` for the contract: rungs may only trade speed,
+        never values."""
+        return run_resilient(self, *args, target=target, policy=policy,
+                             revec=revec, jit=jit, deadline_s=deadline_s,
+                             compile_retries=compile_retries)
+
     def substitution(self, target) -> Dict[str, bool]:
         """Table 2 for this kernel: per intrinsic, does its fixed-width
         register map natively onto ``target`` (``vlen >= width``)?"""
@@ -242,6 +312,7 @@ class CompiledKernel:
         self.target = _targets.resolve_target(target)
         self.policy = policy
         self.revec = revec
+        self.jit = jit
         self.retiling: Optional[RetileResult] = None
         fn = kernel.fn
         if revec:
@@ -273,32 +344,37 @@ class CompiledKernel:
                 f"target={self.target.name}{rv})")
 
 
-def compile_kernel(source: str, name: Optional[str] = None) -> PortedKernel:
+def compile_kernel(source: str, name: Optional[str] = None,
+                   filename: Optional[str] = None) -> PortedKernel:
     """Parse + type + translate one kernel from C source.
 
     ``name`` selects a function when the translation unit defines
-    several (default: the only one, or error).
+    several (default: the only one, or error).  ``filename`` feeds the
+    ``file:line:col`` provenance on ParseError/LowerError.
     """
-    fns = parse(source)
+    fns = parse(source, filename=filename)
     if not fns:
-        raise ParseError("no function definition found")
+        raise ParseError("no function definition found", file=filename)
     if name is None:
         if len(fns) > 1:
             raise ParseError(
-                f"source defines {[f.name for f in fns]}; pass name=")
+                f"source defines {[f.name for f in fns]}; pass name=",
+                file=filename)
         fdef = fns[0]
     else:
         try:
             fdef = next(f for f in fns if f.name == name)
         except StopIteration:
             raise ParseError(f"no function {name!r} in source "
-                             f"(found {[f.name for f in fns]})")
-    return PortedKernel(lower_function(fdef, source=source))
+                             f"(found {[f.name for f in fns]})",
+                             file=filename)
+    return PortedKernel(lower_function(fdef, source=source,
+                                       filename=filename))
 
 
 def compile_file(path: str, name: Optional[str] = None) -> PortedKernel:
     with open(path) as f:
-        return compile_kernel(f.read(), name=name)
+        return compile_kernel(f.read(), name=name, filename=path)
 
 
 def load_corpus(dirpath: str) -> Dict[str, PortedKernel]:

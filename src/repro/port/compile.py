@@ -37,15 +37,13 @@ import numpy as np
 
 from repro.core import targets as _targets
 from repro.core.registry import REGISTRY
+from . import faultinject as _fi
 from .ir import (Block, IfOp, Instr, Loop, PtrType, ScalarType, TFunction,
                  Value, VecType)
+from .resilience import CompileError
 from .revec import loop_affine, loop_condition
 
 __all__ = ["CompileError", "compile_fn"]
-
-
-class CompileError(RuntimeError):
-    pass
 
 
 def _canon(dtype) -> jnp.dtype:
@@ -67,8 +65,12 @@ def compile_fn(fn: TFunction, *, policy: Optional[str] = "pallas",
     rest replay the XLA executable.
     """
     tgt = _targets.get_target(target) if target is not None else None
+    _fi.fault_point("compile.trace", kernel=fn.name,
+                    target=getattr(tgt, "name", None))
 
     def run(*args):
+        _fi.fault_point("compile.run", kernel=fn.name,
+                        target=getattr(tgt, "name", None))
         return _Tracer(fn, policy, tgt).run(*args)
 
     run.__name__ = f"compiled_{fn.name}"
@@ -94,7 +96,8 @@ class _Tracer:
         if len(args) != len(params):
             raise CompileError(
                 f"{self.fn.name} takes {len(params)} args "
-                f"({', '.join(p.hint for p in params)}), got {len(args)}")
+                f"({', '.join(p.hint for p in params)}), got {len(args)}",
+                kernel=self.fn.name)
         env: Dict[Value, Any] = {}
         for p, a in zip(params, args):
             if isinstance(p.type, PtrType):

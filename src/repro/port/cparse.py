@@ -17,6 +17,7 @@ import re
 from typing import List, Optional, Tuple, Union
 
 from .lexer import Token, tokenize
+from .resilience import ParseError
 
 __all__ = [
     "parse", "ParseError",
@@ -25,10 +26,6 @@ __all__ = [
     "Name", "Num", "Call", "Un", "Bin", "Cast", "Index", "Ternary",
     "Member",
 ]
-
-
-class ParseError(SyntaxError):
-    pass
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +190,7 @@ class Member:
     subset, always further indexed (``x.val[0]``)."""
     base: object
     name: str
+    line: int = 0                # source line (for diagnostics)
 
 
 @dataclasses.dataclass
@@ -217,15 +215,28 @@ _BIN_LEVELS = [
 ]
 
 
-def parse(source: str) -> List[FuncDef]:
-    """Parse translation-unit source into its function definitions."""
-    return _Parser(tokenize(source)).program()
+def parse(source: str, filename: Optional[str] = None) -> List[FuncDef]:
+    """Parse translation-unit source into its function definitions.
+
+    Every rejection — including the tokenizer's — surfaces as a
+    :class:`ParseError` carrying ``file:line:col`` provenance; a
+    truncated or mutated source must never escape as a raw
+    ``IndexError``/``KeyError``/``RecursionError``.
+    """
+    try:
+        toks = tokenize(source)
+        return _Parser(toks, filename=filename).program()
+    except ParseError as e:
+        raise e.add_context(file=filename)
+    except RecursionError:
+        raise ParseError("expression nesting too deep", file=filename)
 
 
 class _Parser:
-    def __init__(self, toks: List[Token]):
+    def __init__(self, toks: List[Token], filename: Optional[str] = None):
         self.toks = toks
         self.pos = 0
+        self.filename = filename
 
     # -- token plumbing -----------------------------------------------------
     def peek(self, ahead: int = 0) -> Token:
@@ -245,8 +256,9 @@ class _Parser:
         t = self.peek()
         if not self.at(kind, text):
             want = text or kind
-            raise ParseError(f"expected {want!r}, got {t.text!r} at "
-                             f"line {t.line}, col {t.col}")
+            got = t.text if t.kind != "eof" else "<eof>"
+            raise ParseError(f"expected {want!r}, got {got!r}",
+                             file=self.filename, line=t.line, col=t.col)
         return self.next()
 
     def accept(self, kind: str, text: Optional[str] = None) -> bool:
@@ -292,13 +304,15 @@ class _Parser:
         elif _VEC_RE.match(t.text):
             base = VecT(t.text)
         else:
-            raise ParseError(f"unknown type {t.text!r} at line {t.line}")
+            raise ParseError(f"unknown type {t.text!r}",
+                             file=self.filename, line=t.line, col=t.col)
         if self.accept("punct", "*"):
             if self.at("ident", "const"):
                 self.next()
             if not isinstance(base, Scalar):
-                raise ParseError(f"pointer to {t.text!r} unsupported "
-                                 f"at line {t.line}")
+                raise ParseError(f"pointer to {t.text!r} unsupported",
+                                 file=self.filename, line=t.line,
+                                 col=t.col)
             return Ptr(elem=base, const=const)
         if const and isinstance(base, Scalar):
             return base        # const scalar by value: qualifier is moot
@@ -420,7 +434,9 @@ class _Parser:
             self.next()
             if not isinstance(e, (Name, Un, Index)) or \
                     (isinstance(e, Un) and e.op != "*"):
-                raise ParseError(f"bad assignment target at line {t.line}")
+                raise ParseError("bad assignment target",
+                                 file=self.filename, line=t.line,
+                                 col=t.col)
             rhs = self.expression()
             return Assign(target=e, op="" if t.text == "=" else t.text[:-1],
                           value=rhs)
@@ -477,9 +493,11 @@ class _Parser:
                 idx = self.expression()
                 self.expect("punct", "]")
                 e = Index(base=e, index=idx)
-            elif self.accept("punct", "."):
+            elif self.at("punct", "."):
+                dot_line = self.peek().line
+                self.next()
                 field = self.expect("ident").text
-                e = Member(base=e, name=field)
+                e = Member(base=e, name=field, line=dot_line)
             elif self.at("punct", "(") and isinstance(e, Name):
                 call_line = self.peek().line
                 self.next()
@@ -498,7 +516,12 @@ class _Parser:
         t = self.peek()
         if t.kind == "num":
             self.next()
-            return Num(value=_num_value(t.text))
+            try:
+                return Num(value=_num_value(t.text))
+            except ValueError:
+                raise ParseError(f"bad numeric literal {t.text!r}",
+                                 file=self.filename, line=t.line,
+                                 col=t.col)
         if t.kind == "ident":
             self.next()
             return Name(id=t.text)
@@ -506,8 +529,9 @@ class _Parser:
             e = self.expression()
             self.expect("punct", ")")
             return e
-        raise ParseError(f"unexpected token {t.text!r} at line {t.line}, "
-                         f"col {t.col}")
+        got = t.text if t.kind != "eof" else "<eof>"
+        raise ParseError(f"unexpected token {got!r}",
+                         file=self.filename, line=t.line, col=t.col)
 
 
 def _num_value(text: str) -> Union[int, float]:

@@ -72,8 +72,8 @@ def _unknown_source(x) -> str:
     return f"a scalar produced by vector intrinsic {name!r}{at}"
 
 
-class ExecError(RuntimeError):
-    pass
+from . import faultinject as _fi
+from .resilience import ExecError
 
 
 def _as_np_index(off: int):
@@ -96,11 +96,13 @@ class Machine:
 
     # -- public -----------------------------------------------------------
     def run(self, *args):
+        if not self.abstract:
+            _fi.fault_point("interp.run", kernel=self.fn.name)
         params = self.fn.params
         if len(args) != len(params):
             raise ExecError(f"{self.fn.name} takes {len(params)} args "
                             f"({', '.join(p.hint for p in params)}), "
-                            f"got {len(args)}")
+                            f"got {len(args)}", kernel=self.fn.name)
         env: Dict[Value, Any] = {}
         for p, a in zip(params, args):
             if isinstance(p.type, PtrType):

@@ -40,12 +40,14 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from .ir import IRType, PtrType, ScalarType, VecTupleType, VecType
+from .resilience import PortError
 
 __all__ = ["IntrinSpec", "resolve", "UnknownIntrinsic"]
 
 
-class UnknownIntrinsic(KeyError):
-    pass
+class UnknownIntrinsic(PortError, KeyError):
+    """Intrinsic name outside the supported NEON surface."""
+    default_stage = "lower"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,11 +11,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator, List
 
+from .resilience import ParseError
+
 __all__ = ["Token", "tokenize", "LexError"]
 
 
-class LexError(SyntaxError):
-    pass
+class LexError(ParseError):
+    """Tokenizer rejection; a ParseError (and so a SyntaxError)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +82,8 @@ def _scan(src: str) -> Iterator[Token]:
         if src.startswith("/*", i):
             end = src.find("*/", i + 2)
             if end < 0:
-                raise LexError(f"unterminated comment at line {line}")
+                raise LexError("unterminated comment",
+                               line=line, col=col)
             bump(end + 2 - i)
             continue
         # identifiers / keywords / intrinsic names
@@ -119,6 +122,6 @@ def _scan(src: str) -> Iterator[Token]:
                 bump(len(p))
                 break
         else:
-            raise LexError(f"unexpected character {c!r} at "
-                           f"line {line}, col {col}")
+            raise LexError(f"unexpected character {c!r}",
+                           line=line, col=col)
     yield Token("eof", "", line, col)

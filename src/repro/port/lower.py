@@ -23,12 +23,9 @@ from .intrinsics import IntrinSpec, UnknownIntrinsic, resolve
 from .ir import (Block, IfOp, Instr, IRType, Loop, PtrType, ScalarType,
                  TFunction, Value, VecTupleType, VecType,
                  is_vec_tuple_name, vec_tuple_type, vec_type)
+from .resilience import LowerError
 
 __all__ = ["lower_function", "LowerError"]
-
-
-class LowerError(TypeError):
-    pass
 
 
 _CMP_OPS = {"==", "!=", "<", ">", "<=", ">="}
@@ -51,8 +48,15 @@ def _ctype_to_ir(t, where: str) -> IRType:
     raise LowerError(f"{where}: unsupported type {t!r}")
 
 
-def lower_function(fn: C.FuncDef, source: str = "") -> TFunction:
-    return _Lowerer(fn, source).run()
+def lower_function(fn: C.FuncDef, source: str = "",
+                   filename: Optional[str] = None) -> TFunction:
+    """Lower one parsed function to typed SSA.  Every rejection is a
+    :class:`LowerError` carrying kernel/file provenance — a malformed
+    AST must never escape as a raw ``AttributeError``/``KeyError``."""
+    try:
+        return _Lowerer(fn, source).run()
+    except LowerError as e:
+        raise e.add_context(kernel=fn.name, file=filename)
 
 
 class _Lowerer:
@@ -231,17 +235,21 @@ class _Lowerer:
         env[mem.base.id] = out
 
     def _member_index(self, mem: "C.Member", index, cur: Value) -> int:
+        line = getattr(mem, "line", 0) or None
         if mem.name != "val":
             raise LowerError(f"unknown struct member .{mem.name} (NEON "
-                             f"register structs expose only .val)")
+                             f"register structs expose only .val)",
+                             line=line)
         if not isinstance(cur.type, VecTupleType):
             raise LowerError(f".val on non-struct value of type "
-                             f"{cur.type}")
+                             f"{cur.type}", line=line)
         if not isinstance(index, C.Num) or not isinstance(index.value, int):
-            raise LowerError(".val[] index must be an integer literal")
+            raise LowerError(".val[] index must be an integer literal",
+                             line=line)
         k = index.value
         if not 0 <= k < len(cur.type.elems):
-            raise LowerError(f".val[{k}] out of range for {cur.type}")
+            raise LowerError(f".val[{k}] out of range for {cur.type}",
+                             line=line)
         return k
 
     def store_scalar(self, ptr: Value, s: C.Assign, env):
@@ -414,6 +422,9 @@ class _Lowerer:
                                attrs={"op": op}))
 
     def ptradd(self, ptr: Value, delta: Value) -> Value:
+        if not isinstance(ptr.type, PtrType):
+            raise LowerError(f"indexing / pointer arithmetic on a "
+                             f"non-pointer value of type {ptr.type}")
         out = self.emit(Instr("ptradd", (ptr, delta),
                               self.val(ptr.type, hint=ptr.hint)))
         self.set_root(out, self.root_of(ptr))
@@ -435,15 +446,18 @@ class _Lowerer:
 
     # -- intrinsic calls ----------------------------------------------------
     def call(self, e: C.Call, env, allow_void: bool = False) -> Optional[Value]:
+        line = getattr(e, "line", 0) or None
         try:
             spec = resolve(e.name)
         except UnknownIntrinsic:
             raise LowerError(
                 f"unknown intrinsic {e.name!r}: not in the supported NEON "
-                f"surface (see repro.port.intrinsics)")
+                f"surface (see repro.port.intrinsics)",
+                line=line, intrinsic=e.name)
         if len(e.args) != len(spec.arg_types):
             raise LowerError(f"{e.name}: expected {len(spec.arg_types)} "
-                             f"args, got {len(e.args)}")
+                             f"args, got {len(e.args)}",
+                             line=line, intrinsic=e.name)
         args = []
         for i, (want, ae) in enumerate(zip(spec.arg_types, e.args)):
             v = self.expr(ae, env)

@@ -29,7 +29,8 @@ def report(kernel, *example_args,
            policy: str = "pallas",
            baseline_policy: Optional[str] = "vector",
            compiled: bool = False,
-           executed: bool = False) -> Dict:
+           executed: bool = False,
+           resilience: bool = False) -> Dict:
     """Per-intrinsic migration report for ``kernel`` on ``example_args``.
 
     ``kernel`` is a :class:`repro.port.PortedKernel`; the example args
@@ -43,6 +44,15 @@ def report(kernel, *example_args,
     finally *diverges* across the RVV family: the fixed-width port costs
     the same from rvv-128 to rvv-1024, the re-tiled one shrinks with the
     register.
+
+    ``resilience=True`` adds the degradation-ladder column: each target
+    row gains ``resilience`` — the kernel is actually executed down the
+    ladder (:func:`repro.port.resilience.run_resilient`, eager mode)
+    and the row records which rung served the result, whether it
+    degraded, and the per-rung attempt trail; a fully-failed ladder
+    records the typed error instead of raising.  The ladder contract
+    is that rungs only trade speed, never values, so the report's
+    numbers stay comparable whatever rung answered.
 
     ``executed=True`` adds the instruction-level fact-check: the kernel
     is run through real RVV codegen (:mod:`repro.rvv`) and the emitted
@@ -104,6 +114,19 @@ def report(kernel, *example_args,
                 "speedup_vs_fixed": round(
                     est["total_instrs"] / max(1, rv["total_instrs"]), 3),
             }
+        if resilience:
+            from . import resilience as _resilience
+            try:
+                _, drec = _resilience.run_resilient(
+                    kernel, *example_args, target=tgt, policy=policy,
+                    jit=False)
+                row["resilience"] = drec.to_dict()
+            except _resilience.PortError as e:
+                row["resilience"] = {
+                    "kernel": fn.name, "target": tname,
+                    "used": None, "degraded": False,
+                    "error": str(e), "error_type": type(e).__name__,
+                }
         if executed:
             from repro import rvv
             prog = rvv.emit(kernel, tgt)
@@ -172,6 +195,18 @@ def format_report(rep: Dict) -> str:
             fac += f" {str(r['factor']) + 'x/' + str(r['masked']):>10s}"
         lines.append(rv)
         lines.append(fac)
+    if all("resilience" in rep["targets"][t] for t in tnames):
+        rz = f"{'resilience (ladder rung used)':40s}"
+        for t in tnames:
+            r = rep["targets"][t]["resilience"]
+            short = {"compiled+revec": "c+revec", "compiled": "compiled",
+                     "interp": "interp"}
+            cell = (short.get(r["used"], r["used"]) if r["used"]
+                    else f"ERR:{r.get('error_type', '?')[:6]}")
+            if r.get("degraded"):
+                cell += "!"
+            rz += f" {cell:>10s}"
+        lines.append(rz)
     if all("executed" in rep["targets"][t] for t in tnames):
         ex = f"{'executed (RVV sim, retired)':40s}"
         uo = f"{'  vuops / diverging intrinsics':40s}"

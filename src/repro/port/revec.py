@@ -286,12 +286,29 @@ class RetileResult:
         return self.retiled > 0
 
 
-def retile(fn: TFunction, target) -> RetileResult:
+def retile(fn: TFunction, target, strict: bool = False) -> RetileResult:
     """Re-tile ``fn``'s strip loops at ``target``'s effective register
     width.  Always returns a function (the original body re-emitted
-    unchanged when nothing is re-tilable) plus the decisions taken."""
+    unchanged when nothing is re-tilable) plus the decisions taken.
+
+    ``strict=True`` turns a structural fallback into a
+    :class:`~repro.port.resilience.RevecVeto`: strips were found but
+    none could be widened.  The default keeps the historical contract
+    (narrow execution is a valid, conformant outcome — the degradation
+    ladder records it instead of failing).
+    """
+    from . import faultinject as _fi
+    from .resilience import RevecVeto
+    _fi.fault_point("revec.retile", kernel=fn.name,
+                    target=getattr(target, "name", None) or str(target))
     tgt = _targets.get_target(target)
-    return _Retiler(fn, tgt).run()
+    res = _Retiler(fn, tgt).run()
+    if strict and res.strips > 0 and res.retiled == 0:
+        raise RevecVeto(
+            f"no strip loop could be re-tiled at {tgt.name} "
+            f"({'; '.join(res.notes) or 'no notes'})",
+            kernel=fn.name, target=tgt.name)
+    return res
 
 
 class _Retiler:

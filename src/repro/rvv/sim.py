@@ -32,17 +32,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.port import faultinject as _fi
 from repro.port.interp import _sbin, _scast, _scmp
+from repro.port.resilience import SimError
 from repro.rvv.codegen import (If, PreDecl, RvvProgram, SBin, SConst,
                                SCopy, SLoad, SPtrAdd, SSel, SStore,
                                SUn, V, VSetVL, While, _sew)
 from repro.port.ir import PtrType
 
 __all__ = ["SimError", "RvvSim", "run"]
-
-
-class SimError(RuntimeError):
-    pass
 
 
 _VXRM = {"rnu": 0, "rne": 1, "rdn": 2, "rod": 3}
@@ -114,7 +112,8 @@ class RvvSim:
         params = self.prog.params
         if len(args) != len(params):
             raise SimError(f"{self.prog.fn_name} takes {len(params)} "
-                           f"arguments, got {len(args)}")
+                           f"arguments, got {len(args)}",
+                           kernel=self.prog.fn_name)
         for (name, ty), a in zip(params, args):
             if isinstance(ty, PtrType):
                 buf = np.asarray(a, dtype=ty.elem).copy()
@@ -223,8 +222,14 @@ class RvvSim:
         elif isinstance(st, V):
             # tail-agnostic garbage lanes (NaN/all-ones) legitimately
             # flow through arithmetic past vl — silence numpy's noise
-            with np.errstate(all="ignore"):
-                self._vinstr(st)
+            try:
+                with np.errstate(all="ignore"):
+                    self._vinstr(st)
+            except SimError as e:
+                raise e.add_context(mnemonic=st.mnem,
+                                    site=st.site or None,
+                                    kernel=self.prog.fn_name,
+                                    target=self.prog.target.name)
         else:
             raise SimError(f"unknown statement {st!r}")
 
@@ -311,6 +316,8 @@ class RvvSim:
             mem = self.memory[buf]
             seg = st.seg or 1
             need = seg * vl
+            _fi.fault_point("sim.mem", mnemonic=m, site=st.site,
+                            kernel=self.prog.fn_name)
             if off < 0 or off + need > len(mem):
                 raise SimError(f"{m}: access [{off}, {off + need}) "
                                f"outside {buf}[{len(mem)}]")

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -52,7 +54,10 @@ import numpy as np
 
 from repro.core import targets as _targets
 from repro.port import PortedKernel, revec
+from repro.port import faultinject as _fi
+from repro.port import resilience as _resilience
 from repro.port.ir import PtrType, ScalarType
+from repro.port.resilience import DeadlineExceeded, LadderExhausted, PortError
 
 __all__ = ["BucketPolicy", "Request", "PortEngine"]
 
@@ -97,11 +102,18 @@ _BUCKET_PRESETS = {
 class Request:
     """One kernel invocation: args follow the PortedKernel calling
     convention (ints for scalar params, 1-D arrays for pointers).
-    ``target=None`` uses the engine's default target."""
+    ``target=None`` uses the engine's default target.
+
+    ``deadline_s`` is a per-request budget in seconds, measured from
+    :meth:`PortEngine.submit` entry: a request whose deadline has
+    passed before its chunk launches (or before per-row recovery work
+    starts) resolves to a typed :class:`DeadlineExceeded` instead of
+    consuming more engine time."""
 
     kernel: PortedKernel
     args: Sequence[Any]
     target: Any = None
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,11 +157,24 @@ class _ShapeModel:
 
 
 class PortEngine:
-    """Batched, bucketed, cache-managed serving of ported kernels."""
+    """Batched, bucketed, cache-managed serving of ported kernels.
+
+    Hardened for mixed production slates: engine state is guarded by an
+    RLock; batched-executable failures degrade to per-row recovery down
+    the ladder (:func:`repro.port.resilience.run_resilient` — compiled
+    narrow, then the interpreter, conformance-identical results); a
+    failing request resolves to its typed :class:`PortError` in the
+    results list (``on_error="return"``, the default) instead of
+    aborting the slate; compile attempts retry ``compile_retries``
+    times on transient errors and share the process-wide circuit
+    breaker, so a persistently poisoned (kernel, target) is quarantined
+    and fails fast without stalling its batch-mates.
+    """
 
     def __init__(self, *, target: Any = None, policy: str = "pallas",
                  revec: bool = True, bucket_policy: Any = "fine",
-                 max_batch: int = 32):
+                 max_batch: int = 32, compile_retries: int = 1,
+                 on_error: str = "return"):
         self.target = target            # engine default; per-request override
         self.policy = policy
         self.revec = bool(revec)
@@ -158,20 +183,34 @@ class PortEngine:
                               else bucket_policy)
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if on_error not in ("return", "raise"):
+            raise ValueError(f"on_error must be 'return' or 'raise', "
+                             f"got {on_error!r}")
         self.max_batch = int(max_batch)
+        self.compile_retries = int(compile_retries)
+        self.on_error = on_error
+        self._lock = threading.RLock()
         self._models: Dict[int, _ShapeModel] = {}
         self._programs: Dict[Tuple[int, Any], Any] = {}
         self._shapes_seen: set = set()
         self._stats = {"requests": 0, "batches": 0, "inert_rows": 0,
-                       "padded_elems": 0, "payload_elems": 0}
+                       "padded_elems": 0, "payload_elems": 0,
+                       "batch_faults": 0, "row_fallbacks": 0,
+                       "errors_returned": 0, "deadline_misses": 0,
+                       "program_fallbacks": 0}
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._stats[key] += n
 
     # -- shape model -------------------------------------------------------
 
     def _model(self, kernel: PortedKernel) -> _ShapeModel:
-        m = self._models.get(id(kernel))
-        if m is None:
-            m = self._models[id(kernel)] = _ShapeModel.derive(kernel)
-        return m
+        with self._lock:
+            m = self._models.get(id(kernel))
+            if m is None:
+                m = self._models[id(kernel)] = _ShapeModel.derive(kernel)
+            return m
 
     def _plan(self, req: Request):
         """Group key + padded buffer lengths for one request."""
@@ -212,23 +251,71 @@ class PortEngine:
     # -- batch programs ----------------------------------------------------
 
     def _program(self, kernel: PortedKernel, tgt):
+        """The jitted vmapped executable for (kernel, target).
+
+        Compiles down the batched rungs (revec first, then narrow) with
+        bounded transient retry and the process-wide breaker: a rung
+        whose breaker is open is skipped without an attempt, and a
+        success closes it again.  Raises a typed :class:`PortError`
+        only when every batched rung is out — the caller then degrades
+        to per-row recovery."""
         pk = (id(kernel), tgt)
-        prog = self._programs.get(pk)
-        if prog is None:
-            # eager (jit=False) compile from the process-wide LRU; the
-            # jit wraps the *vmapped* callable so one executable serves
-            # the whole batch
-            eager = kernel.compile(target=tgt, policy=self.policy,
-                                   revec=self.revec, jit=False)
-            prog = self._programs[pk] = jax.jit(jax.vmap(eager))
-        return prog
+        with self._lock:
+            prog = self._programs.get(pk)
+        if prog is not None:
+            return prog
+        brk = _resilience.breaker()
+        rungs = (["compiled+revec", "compiled"] if self.revec
+                 else ["compiled"])
+        last_err: Optional[PortError] = None
+        for rung in rungs:
+            bkey = (kernel.fn.name, tgt.name, rung)
+            if brk.is_open(bkey):
+                continue
+            retries = 0
+            while True:
+                try:
+                    # eager (jit=False) compile from the process-wide
+                    # LRU; the jit wraps the *vmapped* callable so one
+                    # executable serves the whole batch
+                    eager = kernel.compile(
+                        target=tgt, policy=self.policy,
+                        revec=(rung == "compiled+revec"), jit=False)
+                    prog = jax.jit(jax.vmap(eager))
+                except Exception as exc:    # noqa: BLE001 — serve seam
+                    err = _resilience.wrap_error(
+                        exc, stage="compile", kernel=kernel.fn.name,
+                        target=tgt.name)
+                    if err.transient and retries < self.compile_retries:
+                        retries += 1
+                        continue
+                    brk.failure(bkey)
+                    last_err = err
+                    break
+                brk.success(bkey)
+                with self._lock:
+                    self._programs[pk] = prog
+                    if rung != rungs[0]:
+                        self._stats["program_fallbacks"] += 1
+                return prog
+        if last_err is not None:
+            raise last_err
+        raise LadderExhausted(
+            "every batched compile rung is quarantined",
+            kernel=kernel.fn.name, target=tgt.name)
 
     # -- serving -----------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> List[Any]:
         """Run a slate of requests; returns results in request order,
         each exactly what calling the kernel directly would return (one
-        array, or a tuple for multi-output kernels)."""
+        array, or a tuple for multi-output kernels).
+
+        A request that cannot be served — its deadline passed, or every
+        ladder rung failed — resolves to its typed :class:`PortError`
+        in the results list (``on_error="return"``); the rest of the
+        slate is unaffected."""
+        t0 = time.monotonic()
         groups: Dict[Any, List[int]] = {}
         plans = []
         for idx, req in enumerate(requests):
@@ -239,14 +326,34 @@ class PortEngine:
         for key, members in groups.items():
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
-                self._run_chunk(requests, plans, chunk, results)
-        self._stats["requests"] += len(requests)
+                self._run_chunk(requests, plans, chunk, results, t0)
+        self._bump("requests", len(requests))
         return results
 
     def __call__(self, requests: Sequence[Request]) -> List[Any]:
         return self.submit(requests)
 
-    def _run_chunk(self, requests, plans, chunk, results):
+    def _deadline_missed(self, req: Request, t0: float) -> bool:
+        return (req.deadline_s is not None and
+                time.monotonic() - t0 >= req.deadline_s)
+
+    def _run_chunk(self, requests, plans, chunk, results, t0):
+        # Expired requests resolve before any compile/launch work; they
+        # never hold up their batch-mates.
+        live = []
+        for idx in chunk:
+            if self._deadline_missed(requests[idx], t0):
+                self._bump("deadline_misses")
+                err = DeadlineExceeded(
+                    f"deadline of {requests[idx].deadline_s}s passed "
+                    f"before the batch launched",
+                    kernel=requests[idx].kernel.fn.name)
+                results[idx] = self._resolve_error(err)
+            else:
+                live.append(idx)
+        chunk = live
+        if not chunk:
+            return
         req0 = requests[chunk[0]]
         kernel = req0.kernel
         _, tgt, lens = plans[chunk[0]]
@@ -275,11 +382,22 @@ class PortEngine:
 
         shape_sig = (id(kernel), tgt,
                      tuple(None if l is None else l for l in lens))
-        self._shapes_seen.add(shape_sig)
-        self._stats["batches"] += 1
-        self._stats["inert_rows"] += B - len(chunk)
+        with self._lock:
+            self._shapes_seen.add(shape_sig)
+            self._stats["batches"] += 1
+            self._stats["inert_rows"] += B - len(chunk)
 
-        outs = self._program(kernel, tgt)(*cols)
+        try:
+            _fi.fault_point("engine.batch", kernel=kernel.fn.name,
+                            target=tgt.name)
+            outs = self._program(kernel, tgt)(*cols)
+        except Exception as exc:    # noqa: BLE001 — degrade, never corrupt
+            self._bump("batch_faults")
+            err = _resilience.wrap_error(
+                exc, stage="execute", kernel=kernel.fn.name,
+                target=tgt.name)
+            self._fallback_rows(requests, chunk, tgt, results, t0, err)
+            return
         writes = kernel.fn.writes
         if len(writes) == 1:
             outs = (outs,)
@@ -293,10 +411,49 @@ class PortEngine:
             for oi, pi in zip(range(len(writes)), out_params):
                 orig_len = len(requests[idx].args[pi])
                 per_req.append(outs[oi][r, :orig_len])
-                self._stats["payload_elems"] += orig_len
-                self._stats["padded_elems"] += outs[oi].shape[1]
+                self._bump("payload_elems", orig_len)
+                self._bump("padded_elems", outs[oi].shape[1])
             results[idx] = (per_req[0] if len(per_req) == 1
                             else tuple(per_req))
+
+    def _fallback_rows(self, requests, chunk, tgt, results, t0, batch_err):
+        """Per-row recovery when the batched executable is unavailable:
+        each live request descends the full degradation ladder on its
+        own (conformance-identical output, just slower).  A row whose
+        ladder also exhausts resolves to its typed error."""
+        for idx in chunk:
+            req = requests[idx]
+            if self._deadline_missed(req, t0):
+                self._bump("deadline_misses")
+                err = DeadlineExceeded(
+                    f"deadline of {req.deadline_s}s passed during "
+                    f"batch-fault recovery", kernel=req.kernel.fn.name)
+                err.__cause__ = batch_err
+                results[idx] = self._resolve_error(err)
+                continue
+            remaining = None
+            if req.deadline_s is not None:
+                remaining = max(0.0, req.deadline_s -
+                                (time.monotonic() - t0))
+            try:
+                out, _rec = _resilience.run_resilient(
+                    req.kernel, *req.args, target=tgt, policy=self.policy,
+                    revec=self.revec, jit=False, deadline_s=remaining,
+                    compile_retries=self.compile_retries)
+            except PortError as err:
+                results[idx] = self._resolve_error(err)
+                continue
+            self._bump("row_fallbacks")
+            if isinstance(out, tuple):
+                results[idx] = tuple(np.asarray(o) for o in out)
+            else:
+                results[idx] = np.asarray(out)
+
+    def _resolve_error(self, err: PortError):
+        self._bump("errors_returned")
+        if self.on_error == "raise":
+            raise err
+        return err
 
     # -- deploy hooks ------------------------------------------------------
 
@@ -332,12 +489,23 @@ class PortEngine:
         XLA executables this engine has demanded, bounded by
         buckets x targets x kernels."""
         from repro import port as _port
-        s = dict(self._stats)
-        s["batch_programs"] = len(self._shapes_seen)
+        with self._lock:
+            s = dict(self._stats)
+            s["batch_programs"] = len(self._shapes_seen)
         s["pad_overhead"] = (
             0.0 if s["payload_elems"] == 0
             else s["padded_elems"] / s["payload_elems"] - 1.0)
         s["compile_cache"] = _port.compiled_cache_info()
+        s["resilience"] = {
+            "batch_faults": s["batch_faults"],
+            "row_fallbacks": s["row_fallbacks"],
+            "errors_returned": s["errors_returned"],
+            "deadline_misses": s["deadline_misses"],
+            "program_fallbacks": s["program_fallbacks"],
+            "breaker_open": [list(k) for k in
+                             _resilience.breaker().open_keys()],
+            "ladder": _resilience.resilience_stats(),
+        }
         return s
 
     def cache_info(self) -> Dict[str, int]:
