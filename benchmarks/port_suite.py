@@ -16,6 +16,9 @@ Two measurements per corpus kernel:
   PYTHONPATH=src python benchmarks/port_suite.py          # writes BENCH_port.json
   PYTHONPATH=src python benchmarks/port_suite.py --check  # + regression gate
                                                           #   vs committed JSON
+  PYTHONPATH=src python benchmarks/port_suite.py --coverage-gate
+                                # cheap re-tile coverage check vs the
+                                # committed JSON (no XLA, no wall clock)
 """
 from __future__ import annotations
 
@@ -44,14 +47,20 @@ LISTING_KERNELS = ("fold_halves_f32", "relu_bsl_f32", "bitreverse_u8")
 ARITH_KERNELS = ("xnn_f32_vadd_ukernel", "xnn_f32_vmul_ukernel")
 # strip-pattern kernels the re-vectorizer must widen on rvv-1024
 # (fold_halves is the deliberate counter-example: vget_high/low
-# cross-lane structure keeps it at NEON granularity; the qs8 gemm
-# microkernel nests its widening dot inside a row loop, and the matcher
-# only re-tiles top-level strips)
-UNSCALABLE = ("fold_halves_f32", "qs8_gemm_mx8_ukernel")
+# cross-lane structure keeps it at NEON granularity).  The qs8 gemm
+# microkernel used to sit here too — per-site offset re-tiling now
+# widens its inner dot-product strip while the outer row loop stays a
+# recorded narrow fallback.
+UNSCALABLE = ("fold_halves_f32",)
+# kernels whose strips nest inside a scalar outer loop: the inner strip
+# re-tiles, the outer loop is a *structural* narrow fallback the report
+# must carry (not a silent one)
+NESTED = ("qs8_gemm_mx8_ukernel", "f32_rowscale_ukernel")
 # width-changing strips re-tile by the *narrow* side (lane groups): an
 # 8-lane s8 D register has 16x headroom on rvv-1024, not the f32 8x
 WIDENING_16 = ("qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
-               "s8_shl1_widen_narrow_ukernel", "qs8_vmlal_dot_ukernel")
+               "s8_shl1_widen_narrow_ukernel", "qs8_vmlal_dot_ukernel",
+               "qs8_gemm_mx8_ukernel")
 
 # wall-clock suite geometry: large enough that the interpreter's
 # per-strip Python dispatch dominates, small enough to keep CI honest
@@ -165,16 +174,27 @@ def check(reports, wall=None):
 
     # the re-vectorizer: rvv-1024 must finally diverge from rvv-128
     for name, rep in reports.items():
+        r1024 = rep["targets"]["rvv-1024"]["revec"]
         if name in UNSCALABLE:
-            assert rep["targets"]["rvv-1024"]["revec"]["factor"] == 1, \
+            assert r1024["factor"] == 1, \
                 f"{name}: unscalable kernel must not re-tile"
+            assert r1024["vetoes"], \
+                f"{name}: narrow fallback must carry a structured veto"
             continue
         r128 = rep["targets"]["rvv-128"]["revec"]
-        r1024 = rep["targets"]["rvv-1024"]["revec"]
         want = 16 if name in WIDENING_16 else 8
         assert r1024["factor"] == want, \
             f"{name}: expected {want}x re-tile on rvv-1024, got " \
             f"{r1024['factor']}x"
+        assert r1024["retiled"] >= 1, f"{name}: no strip re-tiled"
+        if name in NESTED:
+            # the scalar outer loop is an *accounted* fallback
+            assert r1024["narrow_fallbacks"] >= 1 and r1024["vetoes"], \
+                f"{name}: nested outer loop must be a recorded veto"
+        else:
+            assert r1024["narrow_fallbacks"] == 0, \
+                f"{name}: unexpected narrow fallback " \
+                f"({r1024['vetoes']})"
         assert r1024["total_instrs"] < r128["total_instrs"], \
             f"{name}: rvv-1024 should beat rvv-128 after re-tiling"
         assert r1024["total_instrs"] * 2 <= r128["total_instrs"], \
@@ -236,6 +256,10 @@ def emit_json(reports, wall=None, instr_ratios=None,
                     "revec_instrs": row["revec"]["total_instrs"],
                     "retile_factor": row["revec"]["factor"],
                     "masked_tails": row["revec"]["masked"],
+                    "strips": row["revec"]["strips"],
+                    "retiled_strips": row["revec"]["retiled"],
+                    "narrow_fallbacks": row["revec"]["narrow_fallbacks"],
+                    "vetoes": row["revec"]["vetoes"],
                     "unmapped": sorted(i for i, ok in row["maps"].items()
                                        if not ok)}
                 for t, row in rep["targets"].items()},
@@ -245,9 +269,28 @@ def emit_json(reports, wall=None, instr_ratios=None,
         if instr_ratios and name in instr_ratios:
             data["kernels"][name]["revec_instr_ratio_rvv1024"] = \
                 instr_ratios[name]
+    data["retile_coverage"] = retile_coverage(data["kernels"])
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
     return path
+
+
+def retile_coverage(kernels, target="rvv-1024"):
+    """The suite-level coverage fact the CI gate compares: which
+    kernels re-tile at the widest target, and how many strips per
+    kernel still fall back narrow."""
+    retiled = sorted(n for n, k in kernels.items()
+                     if k["targets"][target]["retile_factor"] > 1)
+    return {
+        "target": target,
+        "retiled_kernels": len(retiled),
+        "total_kernels": len(kernels),
+        "retiled": retiled,
+        "narrow_fallbacks": {
+            n: k["targets"][target]["narrow_fallbacks"]
+            for n, k in sorted(kernels.items())
+            if k["targets"][target]["narrow_fallbacks"]},
+    }
 
 
 def check_regression(data, baseline_path="BENCH_port.json",
@@ -275,6 +318,21 @@ def check_regression(data, baseline_path="BENCH_port.json",
                 if key in row and frow[key] > row[key]:
                     problems.append(
                         f"{name}/{t}: {key} {row[key]} -> {frow[key]}")
+            # re-tile coverage may only grow: a kernel that re-tiled at
+            # the committed baseline must not fall back narrow again
+            if "retile_factor" in row and \
+                    frow["retile_factor"] < row["retile_factor"]:
+                problems.append(
+                    f"{name}/{t}: retile factor regressed "
+                    f"{row['retile_factor']}x -> {frow['retile_factor']}x")
+            if row.get("narrow_fallbacks") is not None and \
+                    frow.get("narrow_fallbacks", 0) > \
+                    row["narrow_fallbacks"]:
+                problems.append(
+                    f"{name}/{t}: narrow fallbacks grew "
+                    f"{row['narrow_fallbacks']} -> "
+                    f"{frow['narrow_fallbacks']} "
+                    f"({[v['reason'] for v in frow.get('vetoes', [])]})")
         if "wall" in krow and "wall" in fresh:
             floor = max(10.0, row_speedup(krow) * wall_slack)
             got = row_speedup(fresh)
@@ -290,6 +348,52 @@ def check_regression(data, baseline_path="BENCH_port.json",
 
 def row_speedup(krow):
     return float(krow["wall"]["compiled_speedup"])
+
+
+def coverage_gate(baseline_path="BENCH_port.json", target="rvv-1024"):
+    """Cheap CI gate (no XLA compiles, no wall clock): recompute each
+    corpus kernel's re-tile structure and fail if coverage dropped
+    below the committed BENCH_port.json — a kernel that re-tiled at the
+    seed silently falling back narrow is exactly the regression this
+    PR exists to stop."""
+    if not os.path.exists(baseline_path):
+        raise AssertionError(f"coverage gate needs a committed "
+                             f"{baseline_path}")
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_cov = base.get("retile_coverage", {})
+    problems, retiled = [], []
+    for case in harness.cases():
+        k = port.compile_file(os.path.join(CORPUS, case.file),
+                              name=case.kernel)
+        res = k.retile(target)
+        if res.factor > 1 and res.retiled:
+            retiled.append(case.kernel)
+        brow = base.get("kernels", {}).get(case.kernel, {}) \
+            .get("targets", {}).get(target)
+        if brow is None:
+            continue
+        if brow["retile_factor"] > 1 and res.factor <= 1:
+            problems.append(
+                f"{case.kernel}: re-tiled {brow['retile_factor']}x at "
+                f"baseline, now narrow "
+                f"({[v['reason'] for v in res.vetoes]})")
+        if res.narrow_fallbacks > brow.get("narrow_fallbacks", 0):
+            problems.append(
+                f"{case.kernel}: narrow fallbacks grew "
+                f"{brow.get('narrow_fallbacks', 0)} -> "
+                f"{res.narrow_fallbacks} "
+                f"({[v['reason'] for v in res.vetoes]})")
+    floor = base_cov.get("retiled_kernels", 0)
+    if len(retiled) < floor:
+        problems.append(f"re-tile coverage dropped: {len(retiled)} "
+                        f"kernels < committed {floor}")
+    if problems:
+        raise AssertionError("re-tile coverage regression vs committed "
+                             f"{baseline_path}:\n  "
+                             + "\n  ".join(problems))
+    print(f"# re-tile coverage gate ({target}): {len(retiled)} kernels "
+          f"re-tiled (committed floor {floor}) — OK")
 
 
 def main(json_path="BENCH_port.json", differential=True,
@@ -335,4 +439,7 @@ def main(json_path="BENCH_port.json", differential=True,
 
 
 if __name__ == "__main__":
-    main(regression="--check" in sys.argv[1:])
+    if "--coverage-gate" in sys.argv[1:]:
+        coverage_gate()
+    else:
+        main(regression="--check" in sys.argv[1:])

@@ -1,0 +1,18 @@
+/* Radix-2 butterfly over (even, odd) pairs with n counting FLOATS and
+ * no scalar tail: the de-interleaved sites need n/2 active pairs, so an
+ * exact whole-lane count only exists per whole narrow strip —
+ * (scale * step) % div == 0, the rounded tail mode.  The old
+ * scale % div == 0 rule silently kept this narrow.
+ *   y[2j]   = x[2j] + x[2j+1]
+ *   y[2j+1] = x[2j] - x[2j+1]          for 2j < n - n % 8             */
+#include <arm_neon.h>
+
+void f32_butterfly_ukernel(size_t n, const float* x, float* y) {
+  for (; n >= 8; n -= 8) {
+    float32x4x2_t vx = vld2q_f32(x); x += 8;
+    float32x4x2_t vy;
+    vy.val[0] = vaddq_f32(vx.val[0], vx.val[1]);
+    vy.val[1] = vsubq_f32(vx.val[0], vx.val[1]);
+    vst2q_f32(y, vy); y += 8;
+  }
+}

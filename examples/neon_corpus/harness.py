@@ -229,6 +229,23 @@ def _ref_vmlal_dot(n, a, b, sum_buf):
     return out
 
 
+def _ref_rowscale(m, n, x, s, y):
+    out = y.copy()
+    if m and n:
+        out[:m * n] = (x[:m * n].reshape(m, n) * s[:m, None]).reshape(-1)
+    return out
+
+
+def _ref_butterfly(n, x, y):
+    # no scalar tail: the kernel floors to whole 8-float strips
+    out = y.copy()
+    w = n - n % 8
+    e, o = x[0:w:2], x[1:w:2]
+    out[0:w:2] = e + o
+    out[1:w:2] = e - o
+    return out
+
+
 def _ref_qs8_gemm(m, k, a, b, c):
     out = c.copy()
     if m:
@@ -259,8 +276,23 @@ def cases(n: int = 64, tail_n: int = 67, seed: int = 0) -> Sequence[Case]:
                 rng.integers(-2, 3, max(1, k * 8)).astype(np.int8),
                 np.zeros(m * 8, np.int16))
 
+    def rowscale_args(rng):   # 3 rows of tail_n (inner strip + inner
+        # scalar tail per row; the outer row loop stays scalar)
+        m = 3
+        return (m, tail_n, _rand(rng, max(1, m * tail_n)),
+                _rand(rng, m, 0.5, 1.5),
+                np.zeros(max(1, m * tail_n), F))
+
     return [
         Case("vadd.c", "xnn_f32_vadd_ukernel", args_abn, _ref_vadd),
+        Case("vadd_x2.c", "xnn_f32_vadd_x2_ukernel", args_abn,
+             _ref_vadd),
+        Case("rowscale.c", "f32_rowscale_ukernel", rowscale_args,
+             _ref_rowscale),
+        Case("butterfly.c", "f32_butterfly_ukernel",
+             lambda rng: (tail_n, _rand(rng, max(1, tail_n)),
+                          np.zeros(max(1, tail_n), F)),
+             _ref_butterfly),
         Case("vmul.c", "xnn_f32_vmul_ukernel", args_abn, _ref_vmul),
         Case("vmulcaddc.c", "xnn_f32_vmulcaddc_ukernel_c4",
              lambda rng: (n, _rand(rng, n), _rand(rng, 4, 0.5, 1.5),

@@ -1,0 +1,24 @@
+/* Row-broadcast scale over an m x n matrix — the nested-loop shape:
+ * the outer loop walks rows (scalar; its pointers advance through the
+ * inner loops, so it must stay narrow), the inner strip multiplies a
+ * row by its broadcast scale, and the inner scalar tail cleans up.
+ * Re-tiling hoists into the inner strip only.
+ *   y[i*n + j] = x[i*n + j] * s[i]                                    */
+#include <arm_neon.h>
+
+void f32_rowscale_ukernel(size_t m, size_t n, const float* x,
+                          const float* s, float* y) {
+  for (; m != 0; m -= 1) {
+    const float sv = *s; s += 1;
+    float32x4_t vs = vdupq_n_f32(sv);
+    size_t nn = n;
+    for (; nn >= 4; nn -= 4) {
+      float32x4_t vx = vld1q_f32(x); x += 4;
+      vst1q_f32(y, vmulq_f32(vx, vs)); y += 4;
+    }
+    for (; nn != 0; nn -= 1) {
+      *y = *x * sv;
+      x += 1; y += 1;
+    }
+  }
+}

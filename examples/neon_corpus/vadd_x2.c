@@ -1,0 +1,22 @@
+/* 2x-unrolled f32 add microkernel (XNNPACK's -x2 variant): each strip
+ * iteration carries two (offset, count) memory sites per pointer walk.
+ * Re-tiling must scale the in-body offsets per site and give the
+ * predicated tail per-site active counts cnt - off*factor (clamped at
+ * zero) — the per-site offset model, not the old unit-stride rule. */
+#include <arm_neon.h>
+
+void xnn_f32_vadd_x2_ukernel(size_t n, const float* a, const float* b,
+                             float* y) {
+  for (; n >= 8; n -= 8) {
+    float32x4_t va0 = vld1q_f32(a);
+    float32x4_t va1 = vld1q_f32(a + 4); a += 8;
+    float32x4_t vb0 = vld1q_f32(b);
+    float32x4_t vb1 = vld1q_f32(b + 4); b += 8;
+    vst1q_f32(y, vaddq_f32(va0, vb0));
+    vst1q_f32(y + 4, vaddq_f32(va1, vb1)); y += 8;
+  }
+  for (; n != 0; n -= 1) {
+    *y = *a + *b;
+    a += 1; b += 1; y += 1;
+  }
+}

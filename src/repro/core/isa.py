@@ -38,7 +38,7 @@ __all__ = [
     "vreinterpret", "vmull", "vaddl", "vsubl", "vmlal", "vmlsl",
     "vmovl", "vmovn", "vqmovn", "vqmovun", "vld2", "vst2", "vld2m",
     "vst2m", "vld3", "vst3", "vld3m", "vst3m", "vld4", "vst4",
-    "vld4m", "vst4m",
+    "vld4m", "vst4m", "vld1g", "vld1gm", "vfold",
 ]
 
 
@@ -695,6 +695,108 @@ def vtile(a, reps):
     return dispatch("vtile", a, reps)
 
 
+# -- vld1g: group-broadcast load (a walking vld1_dup, re-tiled) --------------
+#
+# When the re-vectorizer widens a strip whose body broadcasts one fresh
+# scalar per iteration (qs8gemm's ``vld1_dup_s8(a); a += 1``), the
+# widened body needs ``groups`` consecutive scalars each repeated across
+# ``reps`` lanes: ``result[lane] = buf[offset + lane // reps]``.  On RVV
+# this is a narrow vle of the scalars plus one vrgather through a
+# ``lane >> log2(reps)`` index register.
+
+def _vld1g_width(buf, offset, reps, groups, *_, **__):
+    return _strip_width(int(reps) * int(groups) *
+                        jnp.dtype(buf.dtype).itemsize * 8)
+
+
+def _vld1g_cost(buf, offset, reps, groups, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(reps) * int(groups), buf.dtype)
+
+
+@register("vld1g", "vector", cost=_vld1g_cost, width=_vld1g_width,
+          doc="group-broadcast load (vle + vid/vsrl/vrgather)")
+@register("vld1g", "generic", cost=lambda buf, offset, reps, groups,
+          *_, **__: int(groups) + int(reps) * int(groups),
+          doc="scalar loads + per-lane broadcast loop")
+def _vld1g(buf, offset, reps, groups):
+    lane = jnp.arange(int(reps) * int(groups))
+    # clamped gather: trace-safe for zero-trip widened bodies (see vld1)
+    idx = jnp.clip(offset + lane // int(reps), 0, buf.shape[0] - 1)
+    return buf[idx]
+
+
+def vld1g(buf, offset, reps, groups):
+    """Load ``groups`` consecutive scalars at ``offset`` and broadcast
+    each across ``reps`` lanes (``out[lane] = buf[offset+lane//reps]``)."""
+    return dispatch("vld1g", buf, offset, reps, groups)
+
+
+def _vld1gm_width(buf, offset, reps, groups, cnt, fill=0, *_, **__):
+    return _strip_width(int(reps) * int(groups) *
+                        jnp.dtype(buf.dtype).itemsize * 8)
+
+
+def _vld1gm_cost(buf, offset, reps, groups, cnt, fill=0, *_, **__):
+    from .trace import vinstrs_for
+    return vinstrs_for(int(reps) * int(groups), buf.dtype)
+
+
+@register("vld1gm", "vector", cost=_vld1gm_cost, width=_vld1gm_width,
+          doc="predicated group-broadcast load (vsetvli cnt groups)")
+@register("vld1gm", "generic", cost=lambda buf, offset, reps, groups,
+          cnt, fill=0, *_, **__: int(reps) * int(groups),
+          doc="per-lane guarded broadcast loop")
+def _vld1gm(buf, offset, reps, groups, cnt, fill=0):
+    lane = jnp.arange(int(reps) * int(groups))
+    g = lane // int(reps)
+    idx = jnp.clip(offset + g, 0, buf.shape[0] - 1)
+    return jnp.where(g < cnt, buf[idx], jnp.asarray(fill, buf.dtype))
+
+
+def vld1gm(buf, offset, reps, groups, cnt, fill=0):
+    """Masked :func:`vld1g`: only the first ``cnt`` scalar groups are
+    active; lanes of inactive groups read as ``fill``."""
+    return dispatch("vld1gm", buf, offset, reps, groups, cnt, fill)
+
+
+# -- vfold: additive accumulator group fold (widened -> narrow) --------------
+#
+# A widened additive accumulator carries ``factor`` interleaved narrow
+# accumulators: narrow lane l of the fold is the sum over groups g of
+# wide lane ``g*lanes + l``.  Integer adds are modular so the fold is
+# bitwise exact; float folds reassociate exactly like the halving
+# vslidedown+vfadd ladder the RVV emitter retires.
+
+def _vfold_width(a, factor, *_, **__):
+    return _strip_width(int(np.prod(a.shape) or 1) *
+                        jnp.dtype(a.dtype).itemsize * 8)
+
+
+def _vfold_cost(a, factor, *_, **__):
+    from .trace import vinstrs_for
+    steps = max(1, int(factor).bit_length() - 1)
+    lanes = int(np.prod(a.shape) or 1)
+    # halving ladder: one slidedown + one add per step at shrinking vl
+    return 2 * steps * max(1, vinstrs_for(max(1, lanes // 2), a.dtype))
+
+
+@register("vfold", "vector", cost=_vfold_cost, width=_vfold_width,
+          doc="halving vslidedown+add ladder over the register group")
+@register("vfold", "generic", cost=lambda a, factor, *_, **__:
+          int(np.prod(a.shape) or 1))
+def _vfold(a, factor):
+    f = int(factor)
+    lanes = a.shape[0] // f
+    return jnp.sum(a.reshape(f, lanes), axis=0, dtype=a.dtype)
+
+
+def vfold(a, factor):
+    """Fold a ``factor``-times widened additive accumulator back to its
+    narrow width by summing the ``factor`` interleaved groups."""
+    return dispatch("vfold", a, factor)
+
+
 # -- saturating arithmetic (vqadd/vqsub) -------------------------------------
 
 def _sat_math(x, y, sub: bool):
@@ -1337,6 +1439,17 @@ RVV_MNEMONICS = {
     "vst1":  {"shape": "pv", "any": ("vse<eew>.v",)},
     "vld1m": {"shape": "p+cnt", "any": ("vmv.v.x", "vle<eew>.v",)},
     "vst1m": {"shape": "pv+cnt", "any": ("vse<eew>.v",)},
+    # group-broadcast load (re-tiled walking vld1_dup): narrow vle of the
+    # scalars, then a lane>>log2(reps) gather through an index register
+    "vld1g":  {"shape": "p+g", "any": ("vle<eew>.v", "vid.v", "vsrl.vx",
+                                       "vrgather.vv")},
+    "vld1gm": {"shape": "p+g+cnt", "any": ("vmv.v.x", "vle<eew>.v",
+                                           "vid.v", "vsrl.vx",
+                                           "vrgather.vv")},
+    # additive accumulator fold: halving vslidedown+add ladder
+    "vfold": {"shape": "v", "int": ("vslidedown.vx", "vadd.vv"),
+              "uint": ("vslidedown.vx", "vadd.vv"),
+              "float": ("vslidedown.vx", "vfadd.vv")},
     "vld2":  {"shape": "p", "any": ("vlseg2e<eew>.v",)},
     "vst2":  {"shape": "pt", "any": ("vsseg2e<eew>.v",)},
     "vld2m": {"shape": "p+cnt", "any": ("vmv.v.x", "vlseg2e<eew>.v",)},

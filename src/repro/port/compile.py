@@ -334,6 +334,19 @@ class _Tracer:
                                              axis=0, keepdims=False)
             out = self.dispatch(isa_op, jnp.asarray(x, rty.dtype),
                                 (rty.lanes,))
+        elif kind == "load_group":
+            buf, off = env[ins.args[0]]
+            out = self.dispatch(isa_op, self.memory[buf], off,
+                                ins.attrs["reps"], ins.attrs["groups"])
+        elif kind == "load_group_masked":
+            buf, off = env[ins.args[0]]
+            cnt = env[ins.args[1]]
+            out = self.dispatch(isa_op, self.memory[buf], off,
+                                ins.attrs["reps"], ins.attrs["groups"],
+                                cnt, ins.attrs.get("fill", 0))
+        elif kind == "fold":
+            out = self.dispatch(isa_op, env[ins.args[0]],
+                                ins.attrs["factor"])
         elif kind == "store":
             buf, off = env[ins.args[0]]
             out = self.dispatch(isa_op, self.memory[buf], off,

@@ -325,6 +325,20 @@ class Machine:
             cnt = env[ins.args[1]]
             args = [self.memory[buf], _as_np_index(off), rty.lanes,
                     _as_np_index(cnt), ins.attrs.get("fill", 0)]
+        elif kind == "load_group":
+            buf, off = env[ins.args[0]]
+            args = [self.memory[buf], _as_np_index(off),
+                    ins.attrs["reps"], ins.attrs["groups"]]
+        elif kind == "load_group_masked":
+            buf, off = env[ins.args[0]]
+            cnt = env[ins.args[1]]
+            args = [self.memory[buf], _as_np_index(off),
+                    ins.attrs["reps"], ins.attrs["groups"],
+                    _as_np_index(cnt), ins.attrs.get("fill", 0)]
+        elif kind == "fold":
+            vec = (abstract_reg(ins.args[0].type) if self.abstract
+                   else env[ins.args[0]])
+            args = [vec, ins.attrs["factor"]]
         elif kind == "store":
             buf, off = env[ins.args[0]]
             val = (abstract_reg(ins.args[1].type) if self.abstract

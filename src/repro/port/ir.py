@@ -258,6 +258,9 @@ class TFunction:
     # pointer params written through vst1/sstore — the kernel's outputs
     writes: List[str] = dataclasses.field(default_factory=list)
     source: str = ""
+    # source provenance (the .c file the kernel was lowered from, when
+    # known) — veto/error messages render PortError-style file:line
+    filename: str = ""
 
     # -- introspection ------------------------------------------------------
     def intrinsic_sites(self) -> List[Instr]:

@@ -54,15 +54,17 @@ def lower_function(fn: C.FuncDef, source: str = "",
     :class:`LowerError` carrying kernel/file provenance — a malformed
     AST must never escape as a raw ``AttributeError``/``KeyError``."""
     try:
-        return _Lowerer(fn, source).run()
+        return _Lowerer(fn, source, filename).run()
     except LowerError as e:
         raise e.add_context(kernel=fn.name, file=filename)
 
 
 class _Lowerer:
-    def __init__(self, fn: C.FuncDef, source: str):
+    def __init__(self, fn: C.FuncDef, source: str,
+                 filename: Optional[str] = None):
         self.fn = fn
         self.source = source
+        self.filename = filename or ""
         self._ids = itertools.count()
         self.blocks: List[Block] = []
         self.writes: List[str] = []
@@ -100,7 +102,8 @@ class _Lowerer:
         self.block_stmts(self.fn.body.stmts, env)
         self.blocks.pop()
         return TFunction(name=self.fn.name, params=params, body=body,
-                         writes=self.writes, source=self.source)
+                         writes=self.writes, source=self.source,
+                         filename=self.filename)
 
     # -- statements ---------------------------------------------------------
     def block_stmts(self, stmts, env: Dict[str, Value]):

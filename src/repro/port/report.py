@@ -109,6 +109,12 @@ def report(kernel, *example_args,
                 "effective_vlen": tgt.effective_vlen,
                 "retiled": res.retiled,
                 "masked": res.masked,
+                "strips": res.strips,
+                "narrow_fallbacks": res.narrow_fallbacks,
+                "vetoes": [{"site": v.get("site", ""),
+                            "reason": v.get("reason", ""),
+                            "line": v.get("line", 0)}
+                           for v in res.vetoes],
                 "total_instrs": rv["total_instrs"],
                 "scalar_instrs": rv["scalar_instrs"],
                 "speedup_vs_fixed": round(
@@ -189,12 +195,27 @@ def format_report(rep: Dict) -> str:
     if all("revec" in rep["targets"][t] for t in tnames):
         rv = f"{'re-vectorized (VLENxLMUL re-tile)':40s}"
         fac = f"{'  retile factor / masked tails':40s}"
+        fb = f"{'  strips retiled / narrow fallbacks':40s}"
         for t in tnames:
             r = rep["targets"][t]["revec"]
             rv += f" {r['total_instrs']:>10d}"
             fac += f" {str(r['factor']) + 'x/' + str(r['masked']):>10s}"
+            fb += f" {str(r['retiled']) + '/' + str(r['narrow_fallbacks']):>10s}"
         lines.append(rv)
         lines.append(fac)
+        lines.append(fb)
+        # structured vetoes are mostly structural facts of the IR, so
+        # render them once, deduplicated across the sweep
+        seen = set()
+        for t in tnames:
+            for v in rep["targets"][t]["revec"]["vetoes"]:
+                key = (v["site"], v["reason"], v["line"])
+                if key in seen:
+                    continue
+                seen.add(key)
+                where = f" (line {v['line']})" if v.get("line") else ""
+                lines.append(f"  veto {v['site'] or '<loop>'}: "
+                             f"{v['reason']}{where}")
     if all("resilience" in rep["targets"][t] for t in tnames):
         rz = f"{'resilience (ladder rung used)':40s}"
         for t in tnames:

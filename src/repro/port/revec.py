@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from fractions import Fraction
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -192,20 +193,52 @@ class StripInfo:
     vec_phis: List[Value]          # loop-carried vector accumulators
     scalable: bool                 # body is lane-scalable
     reasons: List[str]
+    # structured veto records mirroring ``reasons`` (site, reason code,
+    # detail, source line) — surfaced on RetileResult.vetoes
+    veto_records: List[dict] = dataclasses.field(default_factory=list)
+    # the block containing the loop (fn.body for top-level strips, an
+    # outer loop's body for hoisted inner strips) — the scalar-tail
+    # search and result rewiring are relative to this block
+    block: Optional[Block] = None
+    # matched via the nested-loop shape ``for (; n != 0; n -= k)``
+    # (the XNNPACK microkernel inner-loop idiom) rather than the
+    # guarded ``for (; n >= K; n -= K)`` strip shape
+    cond_ne: bool = False
 
 
 def strip_loops(fn: TFunction) -> List[StripInfo]:
-    """Match every top-level loop of ``fn`` against the strip pattern."""
-    out = []
-    for ins in fn.body.instrs:
-        if isinstance(ins, Loop):
-            info = _match_strip(ins)
-            if info is not None:
-                out.append(info)
-    return out
+    """Match every loop of ``fn`` against the strip pattern — top-level
+    loops first, then inner loops hoisted out of outer bodies (the
+    nested-microkernel shape; see DESIGN.md §14).  An inner strip's
+    outer-loop phis are loop-invariant over the inner walk by SSA
+    construction, which is what makes the hoist sound."""
+    levels: List[List[StripInfo]] = []
+
+    def walk(block: Block, depth: int):
+        while len(levels) <= depth:
+            levels.append([])
+        for ins in block.instrs:
+            if isinstance(ins, Loop):
+                info = _match_strip(ins, block)
+                if info is not None:
+                    for r in info.veto_records:
+                        r.setdefault("file", fn.filename)
+                    levels[depth].append(info)
+                walk(ins.body, depth + 1)
+            elif isinstance(ins, IfOp):
+                walk(ins.then, depth + 1)
+                walk(ins.els, depth + 1)
+
+    walk(fn.body, 0)
+    return [s for level in levels for s in level]
 
 
-def _match_strip(loop: Loop) -> Optional[StripInfo]:
+def _veto_record(reason: str, detail: str, site="", line=0) -> dict:
+    return {"site": site, "reason": reason, "detail": detail,
+            "line": int(line)}
+
+
+def _match_strip(loop: Loop, block: Block) -> Optional[StripInfo]:
     cond = loop_condition(loop)
     if cond is None:
         return None
@@ -216,13 +249,25 @@ def _match_strip(loop: Loop) -> Optional[StripInfo]:
     step = steps.get(phi)
     if step is None or step >= 0:
         return None                            # not counted down
-    # the canonical XNNPACK strip shape: for (; n >= K; n -= K)
+    # the canonical XNNPACK strip shape (for (; n >= K; n -= K)) or the
+    # nested-microkernel count-to-zero shape (for (; n != 0; n -= k))
     k = -step
-    if op != ">=" or bound.root is not None or phi_off != 0 \
-            or bound.off != k or k <= 1:
+    if bound.root is not None or phi_off != 0:
+        return None
+    if op == ">=" and bound.off == k and k > 1:
+        cond_ne = False
+    elif op == "!=" and bound.off == 0 and k >= 1:
+        cond_ne = True
+    else:
+        return None
+    # a strip body drives at least one vector intrinsic — scalar
+    # cleanup tails (for (; n != 0; n -= 1) over sload/sstore) are not
+    # strip candidates, they are the residual the strip contract keeps
+    if not _has_vector_body(loop.body):
         return None
 
     reasons: List[str] = []
+    records: List[dict] = []
     ptr_steps: Dict[Value, int] = {}
     vec_phis: List[Value] = []
     for p in loop.phis:
@@ -232,6 +277,10 @@ def _match_strip(loop: Loop) -> Optional[StripInfo]:
             d = steps.get(p)
             if d is None:
                 reasons.append(f"pointer {p.hint!r} walk is not affine")
+                records.append(_veto_record(
+                    "non-affine-pointer",
+                    f"pointer {p.hint!r} walk is not affine",
+                    site=p.hint))
             else:
                 ptr_steps[p] = d
         elif isinstance(p.type, VecType):
@@ -239,30 +288,60 @@ def _match_strip(loop: Loop) -> Optional[StripInfo]:
         elif steps.get(p) != 0:
             reasons.append(f"scalar carried value {p.hint!r} is not "
                            f"loop-invariant")
+            records.append(_veto_record(
+                "scalar-carried",
+                f"scalar carried value {p.hint!r} is not loop-invariant",
+                site=p.hint))
 
-    scalable = _body_scalable(loop.body, reasons)
+    scalable = _body_scalable(loop.body, reasons, records)
     return StripInfo(loop=loop, counter=phi, step=k, ptr_steps=ptr_steps,
                      vec_phis=vec_phis, scalable=scalable and not reasons,
-                     reasons=reasons)
+                     reasons=reasons, veto_records=records, block=block,
+                     cond_ne=cond_ne)
 
 
-def _body_scalable(body: Block, reasons: List[str]) -> bool:
+def _has_vector_body(body: Block) -> bool:
+    for ins in body.instrs:
+        if ins.op == "intrin":
+            return True
+        if isinstance(ins, Loop):
+            if _has_vector_body(ins.body):
+                return True
+        elif isinstance(ins, IfOp):
+            if _has_vector_body(ins.then) or _has_vector_body(ins.els):
+                return True
+    return False
+
+
+def _body_scalable(body: Block, reasons: List[str],
+                   records: List[dict]) -> bool:
     ok = True
     for ins in body.instrs:
         if isinstance(ins, (Loop, IfOp)):
             reasons.append("nested control flow inside the strip body")
+            records.append(_veto_record(
+                "nested-control-flow",
+                "nested control flow inside the strip body"))
             ok = False
             continue
         if ins.op != "intrin":
             continue
         isa_op, kind = ins.attrs["isa_op"], ins.attrs["kind"]
         if kind in ("reduce", "get_lane"):
-            reasons.append(f"{ins.attrs['intrinsic']}: in-body reduction"
-                           f"/lane extract is width-dependent")
+            msg = (f"{ins.attrs['intrinsic']}: in-body reduction"
+                   f"/lane extract is width-dependent")
+            reasons.append(msg)
+            records.append(_veto_record(
+                "in-body-reduction", msg, site=ins.attrs["intrinsic"],
+                line=ins.attrs.get("_line", 0)))
             ok = False
         elif isa_op not in _SCALABLE:
-            reasons.append(f"{ins.attrs['intrinsic']}: cross-lane "
-                           f"structure does not widen")
+            msg = (f"{ins.attrs['intrinsic']}: cross-lane "
+                   f"structure does not widen")
+            reasons.append(msg)
+            records.append(_veto_record(
+                "cross-lane", msg, site=ins.attrs["intrinsic"],
+                line=ins.attrs.get("_line", 0)))
             ok = False
     return ok
 
@@ -280,10 +359,20 @@ class RetileResult:
     retiled: int                   # strip loops actually widened
     masked: int                    # widened strips with a predicated tail
     notes: List[str]
+    # structured narrow-fallback records: {site, reason, detail, line,
+    # file} — every strip that stayed narrow says *which* SSA site and
+    # source location vetoed it (machine-checkable; notes stay the
+    # human-readable rendering)
+    vetoes: List[dict] = dataclasses.field(default_factory=list)
 
     @property
     def changed(self) -> bool:
         return self.retiled > 0
+
+    @property
+    def narrow_fallbacks(self) -> int:
+        """Strip loops that stayed at NEON granularity."""
+        return self.strips - self.retiled
 
 
 def retile(fn: TFunction, target, strict: bool = False) -> RetileResult:
@@ -316,6 +405,7 @@ class _Retiler:
         self.fn = fn
         self.tgt = tgt
         self.notes: List[str] = []
+        self.vetoes: List[dict] = []
         self.vmap: Dict[int, Value] = {}       # id(old Value) -> new
         self.defs = _def_map(fn)
         self.strips = {id(s.loop): s for s in strip_loops(fn)}
@@ -323,6 +413,9 @@ class _Retiler:
         self.masked = 0
         self.factor_used = 1
         self._ids = itertools.count(_max_id(fn) + 1)
+        # per-strip legality scratch (reset in retile_strip)
+        self._group_loads: set = set()   # id(load_dup instr) -> vld1g
+        self._fold_phis: set = set()     # id(vec phi) folded post-tail
 
     def val(self, ty, hint="") -> Value:
         return Value(id=next(self._ids), type=ty, hint=hint)
@@ -334,21 +427,48 @@ class _Retiler:
             seen += 1
         return v
 
+    def veto(self, reason: str, detail: str, site: str = "",
+             line: int = 0) -> bool:
+        """Record a narrow fallback: human note + structured record,
+        both carrying source provenance (file:line) PortError-style."""
+        loc = ""
+        if self.fn.filename:
+            loc = f"{self.fn.filename}:{line}: " if line \
+                else f"{self.fn.filename}: "
+        self.notes.append(loc + detail)
+        self.vetoes.append({"site": site, "reason": reason,
+                            "detail": detail, "line": int(line),
+                            "file": self.fn.filename})
+        return False
+
+    @staticmethod
+    def _site_tag(ins: Instr) -> str:
+        """'vld1q_f32@%7' — the offending SSA site for veto messages."""
+        name = ins.attrs.get("intrinsic", ins.op)
+        v = ins.result if ins.result is not None else \
+            (ins.args[0] if ins.args else None)
+        return f"{name}@%{v.id}" if v is not None else name
+
     # -- entry ------------------------------------------------------------
     def run(self) -> RetileResult:
         body = Block()
         self.emit_block_into(self.fn.body, body, top=True)
         fn = TFunction(name=self.fn.name, params=self.fn.params, body=body,
-                       writes=list(self.fn.writes), source=self.fn.source)
+                       writes=list(self.fn.writes), source=self.fn.source,
+                       filename=self.fn.filename)
         return RetileResult(fn=fn, target=self.tgt.name,
                             factor=self.factor_used,
                             strips=len(self.strips), retiled=self.retiled,
-                            masked=self.masked, notes=self.notes)
+                            masked=self.masked, notes=self.notes,
+                            vetoes=self.vetoes)
 
     # -- generic region copy ----------------------------------------------
     def emit_block_into(self, src: Block, dst: Block, top=False):
+        # strips are looked up at every region depth: inner strip loops
+        # (nested-microkernel shape) re-tile in place while their outer
+        # loop is cloned around them
         for ins in src.instrs:
-            strip = self.strips.get(id(ins)) if top else None
+            strip = self.strips.get(id(ins))
             if strip is not None:
                 if strip.scalable and self.retile_strip(strip, dst):
                     continue
@@ -356,6 +476,7 @@ class _Retiler:
                     self.notes.append(
                         f"loop kept at {strip.step}-element strips: "
                         + "; ".join(strip.reasons))
+                    self.vetoes.extend(strip.veto_records)
             dst.instrs.append(self.clone(ins))
 
     def clone(self, ins: Instr) -> Instr:
@@ -406,24 +527,33 @@ class _Retiler:
                 f"strip at {strip.step} elems/iter: no width headroom "
                 f"on {self.tgt.name}")
             return False
+        self._group_loads = set()
+        self._fold_phis = set()
         if any(isinstance(v.type, VecTupleType)
                for v in _outer_vec_uses(loop)):
-            self.notes.append(
+            return self.veto(
+                "tuple-invariant",
                 "loop-invariant register struct used in the body cannot "
                 "be tiled; kept narrow")
+        # accumulators first: fold-phi classification feeds the
+        # offset-class dataflow in check_memory_sites
+        if not self.check_accumulators(strip):
             return False
         if not self.check_memory_sites(strip):
             return False
-        if not self.check_accumulators(strip):
-            return False
 
         plan = self.plan_masked_tail(strip)
-        tail_exists = _tail_consumes(self.fn, strip)
+        tail_exists = _tail_consumes(strip)
+        if plan is None and self._fold_phis:
+            return self.veto(
+                "fold-needs-masked-tail",
+                "accumulator group fold requires a provable masked "
+                "tail; kept narrow")
         if plan is None and strip.vec_phis and not tail_exists:
-            self.notes.append(
+            return self.veto(
+                "no-tail-coverage",
                 "accumulator strip without masked tail or scalar tail "
                 "cannot cover the remainder; kept narrow")
-            return False
 
         self.factor_used = max(self.factor_used, factor)
         self.retiled += 1
@@ -453,19 +583,27 @@ class _Retiler:
     # -- memory-site legality ----------------------------------------------
     def check_memory_sites(self, strip: StripInfo) -> bool:
         """Widening a strip batches ``factor`` consecutive iterations
-        into one: a memory site's reads/writes tile contiguously across
-        the batch only when the site sits at affine offset 0 of a
-        pointer phi whose per-iteration stride equals the site's lane
-        count.  Unrolled bodies (two 4-lane loads per 8-element
-        iteration) interleave sites across the batch, and loads through
-        loop-invariant pointers repeat the *same* elements every
-        iteration — both would silently compute wrong lanes if widened,
-        so they veto re-tiling (ROADMAP: lane-group-aware unroll
-        support)."""
+        into one.  Per pointer root, the body's memory sites are
+        (offset, count) pairs: the distinct pairs must tile the
+        per-iteration walk ``[0, root_step)`` contiguously (a single
+        site at offset 0 covering the whole walk is the unit-stride
+        case; a 2x-unrolled body contributes two half-walk sites).
+        Partial sites additionally carry an *offset class* —
+        ``[off/root_step, (off+count)/root_step)`` — and a dataflow
+        pass proves values never cross classes between their load and
+        store sites (crossing would re-pair elements when the batch is
+        widened).  Walking broadcast loads (``vld1_dup``; one fresh
+        scalar per iteration) re-tile as group-broadcast ``vld1g``
+        sites when the pointer walks exactly one element.  See
+        DESIGN.md §14."""
         syms: Dict[Value, object] = {p: Affine(p, 0)
                                      for p in strip.loop.phis}
         _sym_eval(strip.loop.body, syms)
         phi_steps = strip.ptr_steps
+        # pass 1: collect sites and partition each pointer root's walk
+        sites: Dict[int, tuple] = {}   # id(ins) -> (root, off, consumed)
+        by_root: Dict[int, list] = {}  # id(root) -> [(off, consumed)]
+        roots: Dict[int, Value] = {}
         for ins in strip.loop.body.instrs:
             if ins.op in ("sload", "sstore"):
                 # a scalar access through a walking pointer reads/writes
@@ -473,11 +611,13 @@ class _Retiler:
                 # 1/factor as many, so it would touch 1/factor of them
                 a = syms.get(ins.args[0], Affine(ins.args[0], 0))
                 if isinstance(a, Affine) and phi_steps.get(a.root):
-                    self.notes.append(
+                    return self.veto(
+                        "walking-scalar-access",
                         f"scalar {ins.op} walks pointer "
                         f"{(a.root.hint or '?')!r} per iteration; "
-                        f"kept narrow")
-                    return False
+                        f"kept narrow",
+                        site=self._site_tag(ins),
+                        line=ins.attrs.get("_line", 0))
                 continue
             if ins.op != "intrin":
                 continue
@@ -486,19 +626,26 @@ class _Retiler:
                             "store2"):
                 continue
             name = ins.attrs["intrinsic"]
+            line = ins.attrs.get("_line", 0)
             ptr = ins.args[0]
             a = syms.get(ptr, Affine(ptr, 0))
             root_step = (phi_steps.get(a.root)
                          if isinstance(a, Affine) else None)
             if kind == "load_dup":
-                # a broadcast load is invariant-safe, but widening one
-                # that walks would collapse f distinct scalars into one
-                if root_step:
-                    self.notes.append(
-                        f"{name}: per-iteration broadcast load walks "
-                        f"the buffer; kept narrow")
-                    return False
-                continue
+                if not root_step:
+                    continue                    # invariant broadcast
+                # a walking broadcast load re-tiles as a group load
+                # (factor fresh scalars, each still broadcast across
+                # the original lanes) when it consumes exactly one
+                # element per iteration from the front of the walk
+                if a.off == 0 and root_step == 1:
+                    self._group_loads.add(id(ins))
+                    continue
+                return self.veto(
+                    "walking-broadcast-load",
+                    f"{name}: per-iteration broadcast load walks "
+                    f"the buffer; kept narrow",
+                    site=self._site_tag(ins), line=line)
             # elements the site consumes per iteration: its lane count,
             # times the interleave degree for struct accesses (a vld2
             # of L-lane registers reads one contiguous run of 2L
@@ -515,40 +662,219 @@ class _Retiler:
                 consumed = (len(ins.args[1].type.elems) *
                             ins.args[1].type.lanes)
             if not isinstance(a, Affine) or root_step is None:
-                self.notes.append(
+                return self.veto(
+                    "not-strip-rooted",
                     f"{name}: memory access is not rooted at a "
-                    f"strip-walking pointer; kept narrow")
-                return False
-            if a.off != 0 or root_step != consumed:
-                self.notes.append(
-                    f"{name}: access at offset {a.off} consuming "
-                    f"{consumed} elems against a {root_step}-element "
+                    f"strip-walking pointer; kept narrow",
+                    site=self._site_tag(ins), line=line)
+            if a.off < 0 or root_step <= 0:
+                return self.veto(
+                    "non-contiguous-tiling",
+                    f"{name}: access at offset {a.off} against a "
+                    f"{root_step}-element walk does not tile "
+                    f"contiguously; kept narrow",
+                    site=self._site_tag(ins), line=line)
+            sites[id(ins)] = (a.root, a.off, consumed, ins)
+            roots[id(a.root)] = a.root
+            by_root.setdefault(id(a.root), []).append((a.off, consumed))
+        # each root's distinct (off, consumed) sites must tile
+        # [0, root_step) contiguously
+        for rid, pairs in by_root.items():
+            root = roots[rid]
+            root_step = phi_steps[root]
+            uniq = sorted(set(pairs))
+            pos = 0
+            ok = True
+            for off, consumed in uniq:
+                if off != pos:
+                    ok = False
+                    break
+                pos += consumed
+            if not ok or pos != root_step:
+                ins = next(i for _, (r, o, c, i) in sites.items()
+                           if r is root)
+                return self.veto(
+                    "non-contiguous-tiling",
+                    f"{ins.attrs['intrinsic']} "
+                    f"({self._site_tag(ins)}): sites "
+                    f"{uniq} against a {root_step}-element "
                     f"walk does not tile contiguously (unrolled "
-                    f"strip?); kept narrow")
-                return False
+                    f"strip?); kept narrow",
+                    site=self._site_tag(ins),
+                    line=ins.attrs.get("_line", 0))
+        # pass 2: offset-class dataflow.  A partial site's class is the
+        # rational span its offsets occupy within the walk; values from
+        # one class must not meet another (the widened batch would
+        # re-pair elements).  Accumulators feeding horizontal
+        # reductions absorb any class (lane placement is summed away);
+        # fold accumulators keep per-lane meaning, so they only admit
+        # full-walk (class-free) operands.
+        ACC = "acc"
+        FOLD = "fold"
+        classes: Dict[int, object] = {}
+        for p in strip.vec_phis:
+            classes[id(p)] = FOLD if id(p) in self._fold_phis else ACC
+
+        def site_class(rid_ins):
+            root, off, consumed, _ = sites[rid_ins]
+            root_step = phi_steps[root]
+            if consumed == root_step:
+                return None
+            return (Fraction(off, root_step),
+                    Fraction(off + consumed, root_step))
+
+        for ins in strip.loop.body.instrs:
+            if ins.op != "intrin":
+                continue
+            kind = ins.attrs["kind"]
+            if kind in ("load", "load2") and id(ins) in sites:
+                classes[id(ins.result)] = site_class(id(ins))
+                continue
+            if kind in ("store", "store2") and id(ins) in sites:
+                cls = site_class(id(ins))
+                have = classes.get(id(ins.args[1]))
+                if have is not None and have != cls:
+                    return self.veto(
+                        "offset-class-conflict",
+                        f"{ins.attrs['intrinsic']} "
+                        f"({self._site_tag(ins)}): stored value's "
+                        f"offset class {have} does not match the "
+                        f"site's {cls}; kept narrow",
+                        site=self._site_tag(ins),
+                        line=ins.attrs.get("_line", 0))
+                continue
+            if ins.result is None:
+                continue
+            cls = None
+            for arg in ins.args:
+                if not isinstance(arg.type, (VecType, VecTupleType)):
+                    continue
+                c = classes.get(id(arg))
+                if c is None:
+                    continue
+                if c in (ACC, FOLD) or cls in (ACC, FOLD):
+                    # an accumulator operand absorbs; a fold
+                    # accumulator refuses classed operands
+                    if FOLD in (c, cls) and not (
+                            {c, cls} <= {ACC, FOLD, None}):
+                        return self.veto(
+                            "offset-class-conflict",
+                            f"{ins.attrs['intrinsic']} "
+                            f"({self._site_tag(ins)}): fold "
+                            f"accumulator meets a partial-walk "
+                            f"operand; kept narrow",
+                            site=self._site_tag(ins),
+                            line=ins.attrs.get("_line", 0))
+                    cls = c if c in (ACC, FOLD) else cls
+                elif cls is None:
+                    cls = c
+                elif cls != c:
+                    return self.veto(
+                        "offset-class-conflict",
+                        f"{ins.attrs['intrinsic']} "
+                        f"({self._site_tag(ins)}): operands from "
+                        f"different offset classes {cls} vs {c}; "
+                        f"kept narrow",
+                        site=self._site_tag(ins),
+                        line=ins.attrs.get("_line", 0))
+            classes[id(ins.result)] = cls
+        # yields back into fold/acc phis: a classed value yielded into
+        # a fold phi re-pairs lanes — refuse
+        for p, y in zip(strip.loop.phis, strip.loop.yields):
+            if id(p) in self._fold_phis:
+                c = classes.get(id(y))
+                if c not in (None, ACC, FOLD):
+                    return self.veto(
+                        "offset-class-conflict",
+                        f"accumulator {p.hint!r}: folded value is "
+                        f"partial-walk classed; kept narrow",
+                        site=p.hint)
         return True
 
     # -- accumulator legality ---------------------------------------------
     def check_accumulators(self, strip: StripInfo) -> bool:
+        """A loop-carried vector accumulator is re-tilable two ways:
+        its post-loop consumers are all horizontal reductions (the
+        widened register reduces the same — vaddv needs a provably-zero
+        init), or — the nested-microkernel shape — it is a provably
+        zero-initialized *additive* chain, in which case the widened
+        accumulator carries ``factor`` interleaved partial sums and a
+        ``vfold`` after the predicated tail collapses them back to the
+        narrow register its consumers expect (integer adds are modular,
+        so the fold is bitwise exact)."""
         for phi, res, init in zip(strip.loop.phis, strip.loop.results,
                                   strip.loop.init):
             if phi not in strip.vec_phis:
                 continue
             users = _users_of(self.fn, res)
-            if not users or not all(
+            if users and all(
                     u.op == "intrin" and
                     u.attrs.get("isa_op") in _REDUCERS for u in users):
-                self.notes.append(
-                    f"accumulator {phi.hint!r}: post-loop consumer is "
-                    f"not a horizontal reduction; strip kept narrow")
-                return False
-            ops = {u.attrs["isa_op"] for u in users}
-            if "vaddv" in ops and not self._is_zero_vec(init):
-                self.notes.append(
-                    f"accumulator {phi.hint!r}: vaddv over a tiled "
-                    f"non-zero init would multiply it; kept narrow")
-                return False
+                ops = {u.attrs["isa_op"] for u in users}
+                if "vaddv" in ops and not self._is_zero_vec(init):
+                    return self.veto(
+                        "nonzero-init",
+                        f"accumulator {phi.hint!r}: vaddv over a tiled "
+                        f"non-zero init would multiply it; kept narrow",
+                        site=phi.hint)
+                continue
+            # non-reducer consumers: try the additive group fold
+            idx = [i for i, p in enumerate(strip.loop.phis)
+                   if p is phi][0]
+            y = strip.loop.yields[idx]
+            if users and self._is_zero_vec(init) \
+                    and self._additive_chain(strip, phi, y):
+                self._fold_phis.add(id(phi))
+                continue
+            if users and not self._is_zero_vec(init):
+                return self.veto(
+                    "nonzero-init",
+                    f"accumulator {phi.hint!r}: group fold over a "
+                    f"tiled non-zero init would multiply it; post-loop "
+                    f"consumer is not a horizontal reduction; strip "
+                    f"kept narrow", site=phi.hint)
+            return self.veto(
+                "accumulator-consumer",
+                f"accumulator {phi.hint!r}: post-loop consumer is "
+                f"not a horizontal reduction; strip kept narrow",
+                site=phi.hint)
         return True
+
+    def _additive_chain(self, strip: StripInfo, phi: Value,
+                        y: Value) -> bool:
+        """True when ``phi``'s in-body update is a pure additive chain
+        (acc' = acc +/- f(...)): the accumulator value flows only
+        through additive positions, each link used exactly once, ending
+        at the yield — the shape under which summing the widened
+        register's interleave groups equals the narrow accumulation."""
+        body = strip.loop.body.instrs
+        uses: Dict[int, List[Instr]] = {}
+        for ins in body:
+            for a in ins.args:
+                uses.setdefault(id(a), []).append(ins)
+        if uses.get(id(y)):
+            return False                  # folded value also read raw
+        cur = phi
+        hops = 0
+        while cur is not y and hops < 256:
+            hops += 1
+            us = uses.get(id(cur), [])
+            if len(us) != 1 or us[0].op != "intrin" \
+                    or us[0].result is None:
+                return False
+            ins = us[0]
+            op = ins.attrs.get("isa_op")
+            if op == "vadd":
+                if not (ins.args[0] is cur or ins.args[1] is cur):
+                    return False
+            elif op in ("vsub", "vmla", "vmls", "vfma", "vmlal",
+                        "vmlsl"):
+                if ins.args[0] is not cur:
+                    return False
+            else:
+                return False
+            cur = ins.result
+        return cur is y
 
     def _is_zero_vec(self, v: Value) -> bool:
         d = self.defs.get(id(v))
@@ -570,21 +896,47 @@ class _Retiler:
         # per-counter-element stride — see _site_scales
         for p, d in strip.ptr_steps.items():
             if d <= 0 or d % strip.step != 0:
-                self.notes.append(
+                self.veto(
+                    "pointer-stride",
                     f"pointer {p.hint!r} advances {d}/iter against a "
-                    f"{strip.step}-element counter; masked tail off")
+                    f"{strip.step}-element counter; masked tail off",
+                    site=p.hint)
                 return None
-        # struct sites de-interleave pairs: their per-register active
-        # count is (cnt * scale) / 2, which must be exact for every
-        # possible remainder — provable only when the scale is even
+        # per-site active counts must be whole lane counts for every
+        # possible remainder.  Exact mode: every site's scale/div is an
+        # integer (cnt * scale / div is whole for any cnt) — the tail
+        # covers everything left, per-element.  Rounded mode: div only
+        # divides scale * step (double-widening / interleave chains), so
+        # the tail covers whole original strips (cnt rounded down to a
+        # step multiple) and any sub-strip residue keeps the narrow
+        # loop's own semantics (scalar tail, or contractually absent).
+        # Offset sites keep div == 1 (their count subtracts off*factor,
+        # which has no interleave correction).
         site_scales = self._site_scales(strip)
-        for ins, (scale, div) in site_scales.items():
-            if scale % div != 0:
-                self.notes.append(
+        exact = True
+        for iid, (scale, div, off, ins) in site_scales.items():
+            if off and div != 1:
+                self.veto(
+                    "interleave-remainder",
                     f"{ins.attrs['intrinsic']}: {div}-way interleaved "
-                    f"site at {scale} elems per counter element has no "
-                    f"whole-lane active count; masked tail off")
+                    f"site at offset {off} has no whole-lane active "
+                    f"count; masked tail off",
+                    site=self._site_tag(ins),
+                    line=ins.attrs.get("_line", 0))
                 return None
+            if scale % div != 0:
+                exact = False
+                if (scale * strip.step) % div != 0:
+                    self.veto(
+                        "interleave-remainder",
+                        f"{ins.attrs['intrinsic']}: {div}-way "
+                        f"interleaved site at {scale} elems per "
+                        f"counter element has no whole-lane active "
+                        f"count; masked tail off",
+                        site=self._site_tag(ins),
+                        line=ins.attrs.get("_line", 0))
+                    return None
+        use_rounded = not exact
         # dataflow over the body: masked-off load lanes must stay
         # neutral through every accumulator update (zero through
         # multiplies into additive updates; identity fills for max/min)
@@ -607,6 +959,11 @@ class _Retiler:
                 fills[id(ins)] = 0
                 zeroish[rid] = True
                 continue
+            if kind == "load_dup" and id(ins) in self._group_loads:
+                # masked group-broadcast load: inactive groups fill 0
+                fills[id(ins)] = 0
+                zeroish[rid] = True
+                continue
             if kind == "load2":
                 # struct loads zero-fill; their tuple results are not
                 # tracked through the accumulator dataflow (a strip
@@ -626,7 +983,9 @@ class _Retiler:
                         if isinstance(a.type, VecType)]
             az = [zeroish.get(id(a), False) for a in vec_args]
             zeroish[rid] = False
-            if isa_op in ("vmul", "vand"):
+            if isa_op in ("vmul", "vand", "vmull"):
+                # (the widening multiply of a zero-filled operand is
+                # zero at 2x element width the same way)
                 zeroish[rid] = any(az)
             elif isa_op in ("vsub",):
                 zeroish[rid] = all(az)
@@ -657,27 +1016,34 @@ class _Retiler:
             if phi not in strip.vec_phis:
                 continue
             if not (y is phi or preserved.get(id(y)) == id(phi)):
-                self.notes.append(
+                self.veto(
+                    "unneutral-tail-lanes",
                     f"accumulator {phi.hint!r}: masked-off tail lanes "
-                    f"are not provably neutral; masked tail off")
+                    f"are not provably neutral; masked tail off",
+                    site=phi.hint)
                 return None
-        return fills, site_scales
+        return fills, site_scales, use_rounded
 
-    def _site_scales(self, strip: StripInfo) -> Dict[Instr, tuple]:
-        """Per memory site, (scale, div): the site's pointer advances
-        ``scale`` elements per counter element, and the site packs
-        ``div`` consecutive elements into each register lane (1 for
-        unit-stride vld1/vst1, the segment arity n for de-interleaving
-        vld<n>/vst<n>).  A
-        masked site's per-register active count is cnt * scale / div."""
+    def _site_scales(self, strip: StripInfo) -> Dict[int, tuple]:
+        """Per memory site (keyed by id(instr)), (scale, div, off,
+        instr): the site's pointer advances ``scale`` elements per
+        counter element, the site packs ``div`` consecutive elements
+        into each register lane (1 for unit-stride vld1/vst1, the
+        segment arity n for de-interleaving vld<n>/vst<n>), and the
+        site reads at affine element offset ``off`` into the walk.  A
+        masked site's per-register active count is
+        ``cnt * scale / div - off * factor``."""
         syms: Dict[Value, object] = {p: Affine(p, 0)
                                      for p in strip.loop.phis}
         _sym_eval(strip.loop.body, syms)
-        out: Dict[Instr, tuple] = {}
+        out: Dict[int, tuple] = {}
         for ins in strip.loop.body.instrs:
             if ins.op != "intrin":
                 continue
             kind = ins.attrs["kind"]
+            if kind == "load_dup" and id(ins) in self._group_loads:
+                out[id(ins)] = (1, 1, 0, ins)
+                continue
             if kind not in ("load", "store", "load2", "store2"):
                 continue
             a = syms.get(ins.args[0], Affine(ins.args[0], 0))
@@ -691,7 +1057,7 @@ class _Retiler:
                 div = len(ins.args[1].type.elems)
             else:
                 div = 1
-            out[ins] = (d // strip.step, div)
+            out[id(ins)] = (d // strip.step, div, a.off, ins)
         return out
 
     # -- widened main loop -------------------------------------------------
@@ -720,7 +1086,7 @@ class _Retiler:
                 new_results.append(r)
                 new_init.append(self.look(i))
 
-        cond = self.widen_block(loop.cond, strip, factor)
+        cond = self.widen_block(loop.cond, strip, factor, is_cond=True)
         body = self.widen_block(loop.body, strip, factor)
         new = Loop(op="loop", args=tuple(new_init), phis=new_phis,
                    init=new_init, cond=cond,
@@ -749,12 +1115,33 @@ class _Retiler:
         return wide
 
     def widen_block(self, src: Block, strip: StripInfo,
-                    factor: int) -> Block:
+                    factor: int, is_cond: bool = False) -> Block:
         """Copy a strip cond/body block, widening vector values and
-        scaling the counter/pointer-walk constants."""
+        scaling the counter/pointer-walk constants.  A count-to-zero
+        condition (``n != 0``) guards a widened body only while a whole
+        widened strip remains, so it is rewritten to
+        ``n >= step * factor`` — the predicated tail (or epilogue)
+        covers the residue exactly like the guarded ``>=`` shape."""
         scale = _scaled_consts(src, strip)
         out = Block()
         for ins in src.instrs:
+            if is_cond and strip.cond_ne and ins.op == "scmp" \
+                    and ins.result is strip.loop.cond_value:
+                k = self.val(strip.counter.type, "k.wide")
+                out.instrs.append(Instr(
+                    "const", (), k,
+                    attrs={"value": strip.step * factor}))
+                nv = self.val(ins.result.type, ins.result.hint)
+                self.vmap[id(ins.result)] = nv
+                if len(ins.args) > 1 and ins.args[1] is strip.counter:
+                    out.instrs.append(Instr(
+                        "scmp", (k, self.look(ins.args[1])), nv,
+                        attrs={"op": "<="}))
+                else:
+                    out.instrs.append(Instr(
+                        "scmp", (self.look(ins.args[0]), k), nv,
+                        attrs={"op": ">="}))
+                continue
             if ins.op == "const" and id(ins) in scale:
                 nv = self.val(ins.result.type, ins.result.hint)
                 self.vmap[id(ins.result)] = nv
@@ -762,7 +1149,17 @@ class _Retiler:
                     "const", (), nv,
                     attrs={"value": ins.attrs["value"] * factor}))
             elif ins.op == "intrin":
-                out.instrs.append(self.widen_intrin(ins, factor))
+                if ins.attrs["kind"] == "load_dup" \
+                        and id(ins) in self._group_loads:
+                    out.instrs.append(self.widen_intrin(
+                        ins, factor, override={
+                            "kind": "load_group", "isa_op": "vld1g",
+                            "intrinsic":
+                                ins.attrs["intrinsic"] + "[group]",
+                            "reps": ins.result.type.lanes,
+                            "groups": factor}))
+                else:
+                    out.instrs.append(self.widen_intrin(ins, factor))
             else:
                 out.instrs.append(self.remap_plain(ins))
         return out
@@ -806,9 +1203,13 @@ class _Retiler:
         n_res = new_loop.results[idx[id(strip.counter)]]
 
         # active count: everything left when a scalar tail would have
-        # finished the job; otherwise only whole original strips
+        # finished the job; otherwise — or when a site's interleave
+        # only divides whole strips (rounded mode) — only whole
+        # original strips, leaving the sub-strip residue to the narrow
+        # loop's own contract
+        fills, site_scales, use_rounded = plan
         cty = strip.counter.type
-        if tail_exists:
+        if tail_exists and not use_rounded:
             cnt = n_res
         else:
             k = self.val(cty, "k")
@@ -822,26 +1223,74 @@ class _Retiler:
                                     attrs={"op": "-"}))
 
         # per-site active counts: a site whose pointer walks ``scale``
-        # elements per counter element (and packs ``div`` of them per
-        # lane) is live for cnt * scale / div lanes.  mult == 1 reuses
-        # cnt directly, so unit-stride kernels emit no extra scalars.
-        fills, site_scales = plan
-        cnt_cache: Dict[int, Value] = {1: cnt}
+        # elements per counter element (packing ``div`` of them per
+        # lane) at element offset ``off`` into the walk is live for
+        # cnt * scale / div - off * factor lanes, clamped at zero —
+        # offset sites go fully inactive when the remainder ends before
+        # their slice of the widened batch.  scale/div reduces over the
+        # gcd, so double-widening chains where div only divides the
+        # product cnt*scale still emit exact integer arithmetic.
+        # (1, 1, 0) sites reuse cnt directly, so unit-stride kernels
+        # emit no extra scalars.
+        zero_c: List[Value] = []
 
-        def scaled_cnt(mult: int) -> Value:
-            if mult not in cnt_cache:
-                m = self.val(cty, "m")
-                dst.instrs.append(Instr("const", (), m,
-                                        attrs={"value": mult}))
-                v = self.val(cty, "cnt.scaled")
-                dst.instrs.append(Instr("sbin", (cnt, m), v,
-                                        attrs={"op": "*"}))
-                cnt_cache[mult] = v
-            return cnt_cache[mult]
+        def zero() -> Value:
+            if not zero_c:
+                z = self.val(cty, "zero")
+                dst.instrs.append(Instr("const", (), z,
+                                        attrs={"value": 0}))
+                zero_c.append(z)
+            return zero_c[0]
+
+        cnt_cache: Dict[tuple, Value] = {(1, 1, 0): cnt}
+
+        def site_cnt_of(s: int, d: int, off: int) -> Value:
+            fr = Fraction(s, d)
+            key = (fr.numerator, fr.denominator, off)
+            if key in cnt_cache:
+                return cnt_cache[key]
+            v = cnt_cache.get((fr.numerator, fr.denominator, 0))
+            if v is None:
+                v = cnt
+                if fr.numerator != 1:
+                    m = self.val(cty, "m")
+                    dst.instrs.append(Instr(
+                        "const", (), m,
+                        attrs={"value": fr.numerator}))
+                    nv = self.val(cty, "cnt.scaled")
+                    dst.instrs.append(Instr("sbin", (v, m), nv,
+                                            attrs={"op": "*"}))
+                    v = nv
+                if fr.denominator != 1:
+                    m = self.val(cty, "m")
+                    dst.instrs.append(Instr(
+                        "const", (), m,
+                        attrs={"value": fr.denominator}))
+                    nv = self.val(cty, "cnt.scaled")
+                    dst.instrs.append(Instr("sbin", (v, m), nv,
+                                            attrs={"op": "/"}))
+                    v = nv
+                cnt_cache[(fr.numerator, fr.denominator, 0)] = v
+            if off:
+                o = self.val(cty, "off.wide")
+                dst.instrs.append(Instr(
+                    "const", (), o, attrs={"value": off * factor}))
+                nv = self.val(cty, "cnt.site")
+                dst.instrs.append(Instr("sbin", (v, o), nv,
+                                        attrs={"op": "-"}))
+                neg = self.val(ScalarType("bool"), "cnt.neg")
+                dst.instrs.append(Instr("scmp", (nv, zero()), neg,
+                                        attrs={"op": "<"}))
+                cl = self.val(cty, "cnt.clamped")
+                dst.instrs.append(Instr(
+                    "sselect", (neg, zero(), nv), cl))
+                v = cl
+            cnt_cache[key] = v
+            return v
 
         def site_cnt(ins: Instr) -> Value:
-            s, d = site_scales.get(ins, (1, 1))
-            return scaled_cnt(s // d)
+            s, d, off, _ = site_scales.get(id(ins), (1, 1, 0, ins))
+            return site_cnt_of(s, d, off)
 
         # bind phis to the widened loop's results and copy the body,
         # loads/stores becoming their predicated forms
@@ -861,6 +1310,15 @@ class _Retiler:
                     out = self.widen_intrin(ins, factor, override={
                         "kind": "load_masked", "isa_op": "vld1m",
                         "intrinsic": ins.attrs["intrinsic"] + "[masked]",
+                        "fill": fills.get(id(ins), 0)})
+                    out.args = (out.args[0], site_cnt(ins))
+                elif kind == "load_dup" and id(ins) in self._group_loads:
+                    out = self.widen_intrin(ins, factor, override={
+                        "kind": "load_group_masked", "isa_op": "vld1gm",
+                        "intrinsic":
+                            ins.attrs["intrinsic"] + "[group,masked]",
+                        "reps": ins.result.type.lanes,
+                        "groups": factor,
                         "fill": fills.get(id(ins), 0)})
                     out.args = (out.args[0], site_cnt(ins))
                 elif kind == "store":
@@ -901,12 +1359,28 @@ class _Retiler:
                 pd = strip.ptr_steps.get(p, strip.step)
                 dst.instrs.append(Instr(
                     "ptradd",
-                    (self.look(old_r), scaled_cnt(pd // strip.step)),
+                    (self.look(old_r),
+                     site_cnt_of(pd // strip.step, 1, 0)),
                     adv))
                 final[id(old_r)] = adv
             elif p in strip.vec_phis:
                 y = loop.yields[idx[id(p)]]
-                final[id(old_r)] = self.look(y)
+                wide_y = self.look(y)
+                if id(p) in self._fold_phis:
+                    # collapse the widened additive accumulator's
+                    # interleave groups back to the narrow register
+                    # its (non-reduction) consumers expect
+                    folded = self.val(p.type, (p.hint or "acc")
+                                      + ".fold")
+                    dst.instrs.append(Instr(
+                        "intrin", (wide_y,), folded,
+                        attrs={"intrinsic": f"revec.fold[{factor}x]",
+                               "isa_op": "vfold", "kind": "fold",
+                               "factor": factor,
+                               "width_bits": wide_y.type.bits}))
+                    final[id(old_r)] = folded
+                else:
+                    final[id(old_r)] = wide_y
         self.notes.append("remainder subsumed by one predicated strip "
                           "(vld1m/vst1m/vld2m/vst2m active count)")
         return final
@@ -1017,14 +1491,19 @@ def _scaled_consts(block: Block, strip: StripInfo) -> set:
     return out
 
 
-def _tail_consumes(fn: TFunction, strip: StripInfo) -> bool:
-    """Is there a later top-level loop seeded with this strip's counter
-    result (the XNNPACK scalar-tail shape)?"""
+def _tail_consumes(strip: StripInfo) -> bool:
+    """Is there a later loop in the strip's containing block seeded
+    with this strip's counter result (the XNNPACK scalar-tail shape)?
+    For hoisted inner strips the containing block is the outer loop's
+    body, so a per-row cleanup loop is found the same way."""
     n_res = strip.loop.results[
         [i for i, p in enumerate(strip.loop.phis)
          if p is strip.counter][0]]
+    block = strip.block
+    if block is None:
+        return False
     seen_strip = False
-    for ins in fn.body.instrs:
+    for ins in block.instrs:
         if ins is strip.loop:
             seen_strip = True
             continue

@@ -292,6 +292,10 @@ class _Emit:
         self.uses: Dict[Value, int] = {}
         self._index(fn.body)
         self.fused_shift: Dict[Value, Tuple[Value, Value]] = {}
+        # loop-invariant group-broadcast gather indices, built once in
+        # the program preamble and reused by every load site
+        self.preamble: List[Any] = []
+        self._gidx: Dict[Tuple[int, int, int], str] = {}
 
     # -- bookkeeping -------------------------------------------------------
     def _index(self, block: Block):
@@ -578,6 +582,12 @@ class _Emit:
             self._v(out, "vle", dst,
                     [("p", self.name_of(ins.args[0]))], dt, rty.lanes,
                     site=site)
+        elif kind == "load_group":
+            self._emit_group_load(ins, site, out, masked=False)
+        elif kind == "load_group_masked":
+            self._emit_group_load(ins, site, out, masked=True)
+        elif kind == "fold":
+            self._emit_fold(ins, site, out)
         elif kind == "load_masked":
             self._emit_masked_load(ins, site, out)
         elif kind == "store":
@@ -853,6 +863,102 @@ class _Emit:
                 dt, rty.lanes, site=site, policy="tu", merge=freg,
                 emul=emul)
         self.ensure_vl(out, rty.lanes, sew, emul)
+
+    def _group_index(self, lanes: int, reps: int, dt) -> str:
+        """The gather index for a group-broadcast load
+        (idx = lane >> log2(reps)) is loop-invariant: build it once in
+        the program preamble, memoized per (lanes, reps, sew)."""
+        sew = _sew(dt)
+        key = (lanes, reps, sew)
+        reg = self._gidx.get(key)
+        if reg is not None:
+            return reg
+        idt = f"uint{sew}"
+        emul = _emul_for(lanes, dt, self.vlen)
+        var = f"vl{self.nvl}"
+        self.nvl += 1
+        self.preamble.append(VSetVL(var, lanes, sew, emul))
+        idx = self.fresh("v")
+        self.preamble.append(V(mnem="vid.v", dst=idx, srcs=(),
+                               dtype=idt, sew=sew, emul=emul, vl=var,
+                               site="revec.group_index"))
+        sh = self.fresh("s")
+        self.preamble.append(SConst(sh, f"{idt}_t",
+                                    reps.bit_length() - 1))
+        reg = self.fresh("v")
+        self.preamble.append(V(mnem="vsrl.vx", dst=reg,
+                               srcs=(("v", idx), ("x", sh)),
+                               dtype=idt, sew=sew, emul=emul, vl=var,
+                               site="revec.group_index"))
+        self._gidx[key] = reg
+        return reg
+
+    def _emit_group_load(self, ins, site, out, *, masked):
+        """Widened walking broadcast (re-vectorized vld1_dup): load one
+        element per widened group, then vrgather each group's scalar
+        across its `reps` lanes via the preamble-hoisted index.  The
+        masked form loads only the first `cnt` groups tail-undisturbed
+        over a fill register, matching the narrow scalar-tail
+        residue."""
+        rty = ins.result.type
+        dt = rty.dtype
+        sew = _sew(dt)
+        lanes = rty.lanes
+        reps = ins.attrs["reps"]
+        if reps & (reps - 1):
+            raise CodegenError("group load reps must be a power of 2")
+        groups = ins.attrs["groups"]
+        emul = _emul_for(lanes, dt, self.vlen)
+        idx = self._group_index(lanes, reps, dt)
+        gv = self.fresh("v")
+        if masked:
+            fill = ins.attrs.get("fill", 0)
+            self.ensure_vl(out, groups, sew, emul)
+            fv = self.fresh("s")
+            out.append(SConst(fv, _sctype(dt), fill))
+            mv = "vfmv.v.f" if np.dtype(dt).kind == "f" else "vmv.v.x"
+            self._v(out, mv, gv, [("x", fv)], dt, groups, site=site,
+                    emul=emul)
+            self.ensure_vl(out, self.name_of(ins.args[1]), sew, emul)
+            self._v(out, "vle", gv, [("p", self.name_of(ins.args[0]))],
+                    dt, groups, site=site, policy="tu", merge=gv,
+                    emul=emul)
+        else:
+            self.ensure_vl(out, groups, sew, emul)
+            self._v(out, "vle", gv, [("p", self.name_of(ins.args[0]))],
+                    dt, groups, site=site, emul=emul)
+        self.ensure_vl(out, lanes, sew, emul)
+        dst = self.bind(ins.result)
+        self._v(out, "vrgather.vv", dst, [("v", gv), ("v", idx)], dt,
+                lanes, site=site)
+
+    def _emit_fold(self, ins, site, out):
+        """Additive fold of a widened accumulator back to its narrow
+        shape: log2(factor) halving slidedown+add steps.  Integer adds
+        are modular, so the fold is bitwise-exact regardless of the
+        summation order."""
+        rty = ins.result.type
+        dt = rty.dtype
+        src = ins.args[0]
+        cur_lanes = src.type.lanes
+        if cur_lanes % rty.lanes or \
+                (cur_lanes // rty.lanes) & (cur_lanes // rty.lanes - 1):
+            raise CodegenError("fold factor must be a power of 2")
+        cur = self.name_of(src)
+        add = "vfadd.vv" if np.dtype(dt).kind == "f" else "vadd.vv"
+        while cur_lanes > rty.lanes:
+            half = cur_lanes // 2
+            src_emul = _emul_for(cur_lanes, dt, self.vlen)
+            self.ensure_vl(out, half, _sew(dt), src_emul)
+            tmp = self.fresh("v")
+            self._v(out, "vslidedown.vx", tmp,
+                    [("v", cur), ("i", half)], dt, half, site=site,
+                    emul=src_emul)
+            nxt = self.fresh("v")
+            self._v(out, add, nxt, [("v", cur), ("v", tmp)], dt, half,
+                    site=site)
+            cur, cur_lanes = nxt, half
+        self.names[ins.result] = cur
 
     def _emit_masked_segload(self, ins, site, out):
         rty = ins.result.type
@@ -1134,9 +1240,12 @@ def emit(kernel, target=None, *, revec: bool = True) -> RvvProgram:
     for p in fn.params:
         em.names[p] = p.hint
     em.block(fn.body, body)
+    # loop-invariant material (group-broadcast gather indices) goes in
+    # front of the walked body; it fills lazily during em.block
     return RvvProgram(fn_name=fn.name, target=tgt,
                       params=[(p.hint, p.type) for p in fn.params],
-                      writes=list(fn.writes), body=body,
+                      writes=list(fn.writes),
+                      body=em.preamble + body,
                       retiling=retiling)
 
 

@@ -318,7 +318,10 @@ class RvvSim:
             need = seg * vl
             _fi.fault_point("sim.mem", mnemonic=m, site=st.site,
                             kernel=self.prog.fn_name)
-            if off < 0 or off + need > len(mem):
+            # vl == 0 performs no accesses and cannot fault (the
+            # predicated tail parks fully-inactive offset sites past
+            # the buffer end on purpose)
+            if need and (off < 0 or off + need > len(mem)):
                 raise SimError(f"{m}: access [{off}, {off + need}) "
                                f"outside {buf}[{len(mem)}]")
             if m == "vle":

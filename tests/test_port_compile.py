@@ -336,10 +336,11 @@ def test_unknown_scalar_origin_survives_arithmetic():
         k.estimate(4, x, np.zeros(1, np.float32), target="rvv-128")
 
 
-def test_unrolled_strip_does_not_retile():
-    """2x-unrolled strips interleave memory sites across a widened
-    batch — naive widening computes wrong lanes, so the site-legality
-    rule must keep them narrow (and therefore correct)."""
+def test_unrolled_strip_retiles_with_offset_sites():
+    """2x-unrolled strips carry two (offset, count) memory sites per
+    pointer walk; the per-site offset model re-tiles them as one strip
+    with a predicated masked tail whose per-site active counts subtract
+    the scaled offsets (clamped at zero)."""
     src = """
     void add2x(size_t n, const float* a, const float* b, float* y) {
       for (; n >= 8; n -= 8) {
@@ -358,10 +359,11 @@ def test_unrolled_strip_does_not_retile():
     """
     k = port.compile_kernel(src)
     res = k.retile("rvv-1024")
-    assert res.retiled == 0, res.notes
-    assert any("does not tile contiguously" in s for s in res.notes)
-    # and the compiled path stays correct (n shorter than the buffer:
-    # nothing past n may be touched)
+    assert res.retiled == 1, res.notes
+    assert res.masked == 1
+    assert res.vetoes == []
+    # the compiled re-tiled path stays correct (n shorter than the
+    # buffer: nothing past n may be touched)
     n, size = 26, 40
     rng = np.random.default_rng(0)
     a = rng.uniform(-1, 1, size).astype(np.float32)
@@ -374,7 +376,38 @@ def test_unrolled_strip_does_not_retile():
     np.testing.assert_allclose(got, want, rtol=1e-6)
 
 
-def test_unrolled_accumulator_does_not_retile():
+def test_unrolled_strip_offset_class_conflict_keeps_narrow():
+    """Mixing values across offset classes (the first load of one walk
+    against the second of another) would re-pair elements when the
+    batch widens — the class dataflow must veto it, with the offending
+    SSA site named in the structured record."""
+    src = """
+    void addswap(size_t n, const float* a, const float* b, float* y) {
+      for (; n >= 8; n -= 8) {
+        float32x4_t x0 = vld1q_f32(a);
+        float32x4_t x1 = vld1q_f32(a + 4); a += 8;
+        float32x4_t y0 = vld1q_f32(b);
+        float32x4_t y1 = vld1q_f32(b + 4); b += 8;
+        vst1q_f32(y, vaddq_f32(x0, y1));
+        vst1q_f32(y + 4, vaddq_f32(x1, y0)); y += 8;
+      }
+      for (; n != 0; n -= 1) {
+        *y = *a + *b;
+        a += 1; b += 1; y += 1;
+      }
+    }
+    """
+    k = port.compile_kernel(src)
+    res = k.retile("rvv-1024")
+    assert res.retiled == 0, res.notes
+    assert any(v["reason"] == "offset-class-conflict" for v in res.vetoes)
+    assert any("@%" in v["site"] for v in res.vetoes)
+
+
+def test_unrolled_accumulator_retiles():
+    """Two zero-init accumulators at offset sites re-tile: each widened
+    register accumulates its own offset class and the post-loop vaddv
+    sums lane placement away."""
     src = """
     void dot2x(size_t n, const float* a, float* s) {
       float32x4_t acc0 = vdupq_n_f32(0.0f);
@@ -392,12 +425,35 @@ def test_unrolled_accumulator_does_not_retile():
     }
     """
     k = port.compile_kernel(src)
-    assert k.retile("rvv-1024").retiled == 0
+    res = k.retile("rvv-1024")
+    assert res.retiled == 1, res.notes
     n = 26
     x = np.arange(1, n + 1, dtype=np.float32)
     got = np.asarray(k.compile(target="rvv-1024", revec=True)(
         n, x, np.zeros(1, np.float32)))
     np.testing.assert_allclose(got[0], x.sum(), rtol=1e-6)
+
+
+def test_nested_inner_strip_retiles():
+    """qs8gemm's inner dot-product loop re-tiles while the outer row
+    loop stays scalar: the walking vld1_dup becomes a group-broadcast
+    load and the additive int16 accumulator folds back bitwise."""
+    k = port.compile_file(os.path.join(CORPUS, "qs8gemm.c"))
+    res = k.retile("rvv-1024")
+    assert res.strips == 2            # vetoed outer + re-tiled inner
+    assert res.retiled == 1 and res.masked == 1
+    assert res.narrow_fallbacks == 1
+    assert any(v["reason"] == "nested-control-flow" for v in res.vetoes)
+    assert all(v["file"].endswith("qs8gemm.c") for v in res.vetoes)
+    m, kk = 3, 17
+    rng = np.random.default_rng(2)
+    a = rng.integers(-2, 3, m * kk).astype(np.int8)
+    b = rng.integers(-2, 3, kk * 8).astype(np.int8)
+    ref = (a.reshape(m, kk).astype(np.int32)
+           @ b.reshape(kk, 8).astype(np.int32)).astype(np.int16).ravel()
+    got = np.asarray(k.compile(target="rvv-1024", revec=True)(
+        m, kk, a, b, np.zeros(m * 8, np.int16)))
+    np.testing.assert_array_equal(got, ref)
 
 
 def test_invariant_pointer_load_in_body_does_not_retile():

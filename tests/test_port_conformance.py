@@ -166,7 +166,17 @@ def test_interp_conformance(kernel, target, kernels):
 
 NEW_SURFACE = ("qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
                "s8_shl1_widen_narrow_ukernel", "cmul_f32_ukernel",
-               "qs8_gemm_mx8_ukernel", "qs8_vmlal_dot_ukernel")
+               "qs8_gemm_mx8_ukernel", "qs8_vmlal_dot_ukernel",
+               "xnn_f32_vadd_x2_ukernel", "f32_rowscale_ukernel",
+               "f32_butterfly_ukernel")
+
+# the per-site offset re-tiling surface: unrolled strips (two sites per
+# walk), nested inner strips (outer loop stays a recorded fallback),
+# and the rounded masked-tail mode (no whole-lane count per element,
+# but one per whole narrow strip)
+OFFSET_KERNELS = ("xnn_f32_vadd_x2_ukernel", "f32_rowscale_ukernel",
+                  "f32_butterfly_ukernel", "qs8_gemm_mx8_ukernel")
+NESTED_KERNELS = ("f32_rowscale_ukernel", "qs8_gemm_mx8_ukernel")
 
 
 # XLA recompiles per buffer shape, so the compiled matrix is the
@@ -240,6 +250,79 @@ def test_widened_strip_matches_narrow_port_all_tails(kernel, kernels):
                          if isinstance(narrow, tuple)
                          else np.asarray(narrow), case,
                          f"{kernel}/n={n}/widened-vs-narrow")
+
+
+@pytest.mark.parametrize("kernel", OFFSET_KERNELS)
+def test_offset_site_retile_structure(kernel, kernels):
+    """The per-site offset surface re-tiles on rvv-1024 with a masked
+    tail; nested kernels carry their scalar outer loop as a *recorded*
+    structured veto (site, reason, file), never a silent fallback."""
+    res = kernels[kernel].retile("rvv-1024")
+    assert res.retiled == 1, res.notes
+    assert res.masked == 1, res.notes
+    if kernel in NESTED_KERNELS:
+        assert res.strips == 2
+        assert res.narrow_fallbacks == 1
+        assert res.vetoes, "outer-loop fallback must be recorded"
+        for v in res.vetoes:
+            assert v["reason"]
+            assert v["file"].endswith(".c")
+    else:
+        assert res.narrow_fallbacks == 0
+        assert res.vetoes == []
+
+
+# per-kernel tail-critical lengths: each set crosses the narrow-strip
+# boundary, the wide-strip boundary (step * factor on rvv-1024), and
+# both +-1 neighbours; rowscale/gemm lengths drive the *inner* strip
+_OFFSET_LENGTHS = {
+    "xnn_f32_vadd_x2_ukernel": (0, 1, 7, 8, 9, 63, 64, 65, 67),
+    "f32_rowscale_ukernel": (0, 1, 3, 4, 5, 31, 32, 33, 37),
+    "f32_butterfly_ukernel": (0, 1, 7, 8, 9, 63, 64, 65, 67),
+    "qs8_gemm_mx8_ukernel": (0, 1, 2, 15, 16, 17, 33),
+}
+
+
+@pytest.mark.parametrize("kernel", OFFSET_KERNELS)
+def test_offset_site_matches_narrow_port_all_tails(kernel, kernels):
+    """Widened execution == narrow port == reference for every tail
+    shape of the offset-site surface (interpreting the re-tiled IR:
+    no XLA compiles, so the sweep is dense)."""
+    k = kernels[kernel]
+    wide_fn = k.retile("rvv-1024").fn
+    for n in _OFFSET_LENGTHS[kernel]:
+        case = _case_for(kernel, n)
+        args = _args_for(case, seed=n)
+        narrow = k(*args, target="rvv-128")
+        wide = Machine(wide_fn, policy="pallas", target="rvv-1024").run(
+            *args)
+        _assert_conforms(wide, case.reference(*args), case,
+                         f"{kernel}/n={n}/offset-widened")
+        _assert_conforms(wide, tuple(np.asarray(x) for x in narrow)
+                         if isinstance(narrow, tuple)
+                         else np.asarray(narrow), case,
+                         f"{kernel}/n={n}/offset-widened-vs-narrow")
+
+
+def test_rounded_tail_mode_matches_narrow_floor(kernels):
+    """Satellite regression for the loosened tail-legality rule: the
+    butterfly kernel has no scalar tail and no whole-lane count per
+    element (scale % div != 0), but (scale * step) % div == 0 proves a
+    whole-lane count per narrow strip — the rounded mode must floor the
+    active count exactly like the narrow port does, bitwise."""
+    k = kernels["f32_butterfly_ukernel"]
+    res = k.retile("rvv-1024")
+    assert res.retiled == 1 and res.masked == 1, res.notes
+    wide_fn = res.fn
+    for n in (0, 1, 7, 8, 9, 15, 16, 17, 23, 24, 25, 63, 64, 65):
+        case = _case_for("f32_butterfly_ukernel", n)
+        args = _args_for(case, seed=n)
+        narrow = np.asarray(k(*args, target="rvv-128"))
+        wide = np.asarray(Machine(wide_fn, policy="pallas",
+                                  target="rvv-1024").run(*args))
+        np.testing.assert_array_equal(
+            wide, narrow,
+            err_msg=f"rounded tail diverged from narrow floor at n={n}")
 
 
 @pytest.mark.parametrize("kernel", WIDENING_KERNELS + STRUCT_KERNELS)

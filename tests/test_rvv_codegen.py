@@ -35,6 +35,8 @@ TAIL_KERNELS = (
     "qs8_vaddl_requant_ukernel", "qs8_vmul_requant_ukernel",
     "s8_shl1_widen_narrow_ukernel", "cmul_f32_ukernel",
     "u8_rgbx_deinterleave_ukernel", "qs8_vmlal_dot_ukernel",
+    "xnn_f32_vadd_x2_ukernel", "f32_rowscale_ukernel",
+    "f32_butterfly_ukernel",
 )
 
 
