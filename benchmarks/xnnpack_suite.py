@@ -27,6 +27,8 @@ Workload sizes follow XNNPACK microkernel benchmark conventions
 from __future__ import annotations
 
 import json
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -209,7 +211,47 @@ def emit_json(sweep, tpu_rows, path="BENCH_xnnpack.json"):
     return path
 
 
-def main(json_path="BENCH_xnnpack.json"):
+def check_regression(data, baseline_path="BENCH_xnnpack.json"):
+    """Exact-count gate vs the committed baseline.
+
+    The metric is a deterministic cost-model evaluation, not a
+    measurement — so the tolerance is ZERO: tiers must match and
+    instruction counts must be *identical*.  (The ibilinear baseline
+    drifted from PR 2's committed counts without tripping anything
+    because this gate didn't exist; any intentional cost-model change
+    now shows up as a reviewed baseline diff, never a silent shift.)
+    """
+    if not os.path.exists(baseline_path):
+        print(f"# no committed {baseline_path}; skipping regression gate")
+        return
+    with open(baseline_path) as f:
+        base = json.load(f)
+    problems = []
+    for tname, ops in base.get("targets", {}).items():
+        fresh_ops = data["targets"].get(tname)
+        if fresh_ops is None:
+            problems.append(f"{tname}: target column disappeared")
+            continue
+        for name, row in ops.items():
+            fr = fresh_ops.get(name)
+            if fr is None:
+                problems.append(f"{name}@{tname}: op disappeared")
+                continue
+            for key in ("baseline_instrs", "customized_instrs",
+                        "baseline_tier", "customized_tier"):
+                if fr[key] != row[key]:
+                    problems.append(
+                        f"{name}@{tname}: {key} {row[key]!r} -> "
+                        f"{fr[key]!r}")
+    if problems:
+        raise AssertionError(
+            "BENCH_xnnpack drift vs committed baseline (cost models are "
+            "deterministic — every diff is a reviewed change):\n  "
+            + "\n  ".join(problems))
+    print(f"# regression gate vs {baseline_path}: exact match OK")
+
+
+def main(json_path="BENCH_xnnpack.json", regression=False):
     sweep = run_rvv_sweep(check=True)
     print("# RVV cost model sweep (paper Figure 2 reproduction)")
     print(f"{'function':12s}", *(f"{w:>10s}" for w in targets.RVV_FAMILY))
@@ -228,6 +270,14 @@ def main(json_path="BENCH_xnnpack.json"):
         print(f"{r['name']:12s} {r['customized_tier']:>8s} "
               f"{r['speedup']:>13.2f}x {r['traffic_ratio']:>13.2f}x")
 
+    if regression:
+        # gate BEFORE overwriting the committed baseline
+        tpu_name = tpu_rows[0]["target"] if tpu_rows else "tpu"
+        fresh = {"targets": {
+            tname: {r["name"]: r for r in rows}
+            for tname, rows in list(sweep.items()) + [(tpu_name,
+                                                       tpu_rows)]}}
+        check_regression(fresh, baseline_path=json_path)
     path = emit_json(sweep, tpu_rows, json_path)
     print(f"\n# wrote {path}")
     # legacy contract for benchmarks/run.py: 'rvv128' mirrors rvv-128
@@ -238,4 +288,4 @@ def main(json_path="BENCH_xnnpack.json"):
 
 
 if __name__ == "__main__":
-    main()
+    main(regression="--check" in sys.argv[1:])

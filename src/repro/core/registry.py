@@ -161,6 +161,12 @@ class _Registry:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        # lookups whose key was poisoned by an unhashable argument:
+        # selection still works, it just cannot be memoized.  Counted
+        # separately so hits + misses + uncacheable == total lookups —
+        # the autotune layer keys off these stats, and a silent third
+        # bucket made the totals lie.
+        self._uncacheable = 0
 
     # -- registration -------------------------------------------------------
     def register(self, op: str, tier: str, *, cost=None, supports=None,
@@ -236,6 +242,14 @@ class _Registry:
                 note = "" if width_ok else \
                     f"vlen {target.vlen} < width {width}"
                 cost = self._eval_cost(low, args, kw) if valid else None
+                if cost is not None and tier != "generic":
+                    # measured-count term: profile-guided correction
+                    # factors (repro.port.autotune) scale the abstract
+                    # estimate toward what the RVV simulator actually
+                    # retires.  Generic scalar costs stay static — the
+                    # calibration is fit on vector-tier retired counts.
+                    from . import trace  # local import to avoid cycle
+                    cost = trace.calibrated_cost(op, cost)
                 cands.append(Candidate(lowering=low, valid=valid,
                                        width_ok=width_ok, cost=cost,
                                        note=note))
@@ -282,6 +296,9 @@ class _Registry:
                     self._hits += 1
                     self._cache.move_to_end(key)
                     return hit
+        else:
+            with self._cache_lock:
+                self._uncacheable += 1
         best = self._pick(self._candidates(op, args, kw, pol, tgt))
         if best is None:
             raise KeyError(f"no valid lowering for op {op!r} at policy "
@@ -348,12 +365,25 @@ class _Registry:
         trace.record(low, *args, cost=cost, **kw)
         return low.fn(*args, **kw)
 
+    # -- calibration --------------------------------------------------------
+    def set_calibration(self, factors, default: float = 1.0) -> None:
+        """Install (or with ``None`` clear) profile-guided per-op cost
+        correction factors and invalidate memoized selections — cached
+        entries were ranked under the previous cost surface."""
+        from . import trace  # local import to avoid cycle
+        trace.set_calibration(factors, default=default)
+        with self._cache_lock:
+            self._cache.clear()
+
     # -- introspection ------------------------------------------------------
     def cache_info(self) -> Dict[str, int]:
         with self._cache_lock:
             return {"hits": self._hits, "misses": self._misses,
                     "size": len(self._cache), "capacity": self._capacity,
-                    "evictions": self._evictions}
+                    "evictions": self._evictions,
+                    "uncacheable": self._uncacheable,
+                    "lookups": self._hits + self._misses
+                    + self._uncacheable}
 
     def set_cache_capacity(self, capacity: int) -> None:
         """Bound the selection cache (LRU eviction past ``capacity``)."""
@@ -369,6 +399,7 @@ class _Registry:
         with self._cache_lock:
             self._cache.clear()
             self._hits = self._misses = self._evictions = 0
+            self._uncacheable = 0
 
     def ops(self):
         return sorted(self._ops)

@@ -130,6 +130,34 @@ class Target:
             return self.lmul * self.vlen >= bits
         return True
 
+    # RVV architectural register file: 32 vector registers.  An LMUL=m
+    # value occupies m of them (2m for a widened 2xSEW destination), so
+    # register grouping trades live-value capacity for width — the
+    # pressure model the autotuner uses to bound its LMUL search.
+    N_VREGS = 32
+
+    def admissible_lmuls(self, width_scale: int = 1,
+                         live_values: int = 0) -> tuple:
+        """LMUL candidates legal for a kernel on this target's register
+        file: the widened register group must exist (``lmul *
+        width_scale <= 8`` — a widening body's 2xSEW destinations spill
+        into double groups, so EMUL caps at 8), and ``live_values``
+        concurrently-live vector values at ``lmul x width_scale``
+        registers each must fit the 32-register file (a few registers
+        held back for codegen temporaries).  Non-VLA targets have no
+        grouping: ``(1,)``."""
+        if not self.vla:
+            return (1,)
+        scale = max(1, int(width_scale))
+        out = []
+        for m in (1, 2, 4, 8):
+            if m * scale > 8:
+                continue
+            if live_values and live_values * m * scale > self.N_VREGS - 4:
+                continue
+            out.append(m)
+        return tuple(out) or (1,)
+
 
 def _rvv(bits: int, lmul: int = 1) -> Target:
     suffix = "" if lmul == 1 else f"-m{lmul}"

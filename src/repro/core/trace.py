@@ -49,6 +49,62 @@ def _counts() -> Optional[Dict]:
 
 _cost_warned = set()
 
+# ---------------------------------------------------------------------------
+# Profile-guided calibration (repro.port.autotune installs this).
+#
+# The declared cost models are *estimates*: they charge LMUL micro-ops
+# per grouped issue while the simulator retires one instruction per
+# mnemonic, and per-op constants drift from what the emitted RVV stream
+# actually does (vbsl estimates 3 bitwise ops but retires a
+# 2-instruction mask+merge).  A calibration maps measured retired
+# counts back onto the abstract model as per-op multiplicative
+# correction factors; the registry consults it for every non-generic
+# candidate so selection ranks by *measured*, not declared, cost.
+# ---------------------------------------------------------------------------
+
+_calibration_lock = threading.Lock()
+_calibration: Optional[Dict] = None
+
+
+def set_calibration(factors: Optional[Dict[str, float]],
+                    default: float = 1.0) -> None:
+    """Install per-op correction factors (``{isa_op: retired/estimated}``)
+    applied by the registry to every non-generic candidate cost.
+    ``None`` uninstalls.  Callers that memoize selections (the registry
+    does) must invalidate after changing this — use
+    ``registry.REGISTRY.set_calibration`` which does both."""
+    global _calibration
+    with _calibration_lock:
+        if factors is None:
+            _calibration = None
+        else:
+            _calibration = {"factors": {str(k): float(v)
+                                        for k, v in factors.items()},
+                            "default": float(default)}
+
+
+def get_calibration() -> Optional[Dict]:
+    """The installed calibration (``{"factors": {...}, "default": f}``)
+    or None."""
+    with _calibration_lock:
+        return None if _calibration is None else {
+            "factors": dict(_calibration["factors"]),
+            "default": _calibration["default"]}
+
+
+def calibrated_cost(op: str, cost: Optional[int]) -> Optional[int]:
+    """Apply the installed per-op correction factor to an abstract cost
+    (identity when no calibration is installed or cost is unknown).
+    Never rounds a positive cost below 1 — a measured op is never free."""
+    if cost is None:
+        return None
+    with _calibration_lock:
+        cal = _calibration
+    if cal is None:
+        return cost
+    f = cal["factors"].get(op, cal["default"])
+    return max(1, int(round(cost * f))) if cost > 0 else 0
+
 
 def warn_cost_model(lowering, exc, consequence: str) -> None:
     """Log a broken cost model once per (op, tier) — it is a real defect

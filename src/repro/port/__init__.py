@@ -56,6 +56,7 @@ __all__ = [
     "CacheCorruption", "DeadlineExceeded", "LadderExhausted",
     "DegradationRecord", "run_resilient", "degradation_records",
     "resilience_stats", "reset_resilience", "resilience", "faultinject",
+    "autotune",
 ]
 
 
@@ -107,16 +108,23 @@ class _CompiledKernelCache:
                 and hit.target == key[1]
                 and hit.policy == key[2]
                 and bool(hit.revec) == key[3]
-                and bool(getattr(hit, "jit", key[4])) == key[4])
+                and bool(getattr(hit, "jit", key[4])) == key[4]
+                and getattr(hit, "factor_cap", None) == key[5]
+                and getattr(hit, "tail", "auto") == key[6])
 
     def get(self, kernel: "PortedKernel", *, target=None,
             policy: Optional[str] = "pallas", revec: bool = False,
-            jit: bool = True) -> "CompiledKernel":
+            jit: bool = True, factor_cap: Optional[int] = None,
+            tail: str = "auto") -> "CompiledKernel":
         from repro.core import targets as _targets
         tgt = _targets.resolve_target(target)
         # PortedKernel hashes by identity; keeping it in the key also
         # keeps it alive for as long as its compiled variants are cached.
-        key = (kernel, tgt, policy, bool(revec), bool(jit))
+        # The retile knobs (factor_cap, tail) are part of the key: two
+        # tuned variants of one (kernel, target) are distinct
+        # executables and must not alias.
+        key = (kernel, tgt, policy, bool(revec), bool(jit),
+               factor_cap, tail)
         while True:
             with self._lock:
                 hit = self._cache.get(key)
@@ -147,7 +155,8 @@ class _CompiledKernelCache:
             try:
                 compiled = CompiledKernel(kernel, target=tgt,
                                           policy=policy, revec=revec,
-                                          jit=jit)
+                                          jit=jit, factor_cap=factor_cap,
+                                          tail=tail)
             except BaseException:
                 with self._lock:
                     self._inflight.pop(key, None)
@@ -240,13 +249,16 @@ class PortedKernel:
                        abstract=True).run(*args)
 
     # -- the JIT backend ---------------------------------------------------
-    def retile(self, target) -> RetileResult:
+    def retile(self, target, *, factor_cap: Optional[int] = None,
+               tail: str = "auto") -> RetileResult:
         """Re-tile this kernel's strip loops at ``target``'s effective
         register width (VLEN x LMUL) — see :mod:`repro.port.revec`."""
-        return retile(self.fn, target)
+        return retile(self.fn, target, factor_cap=factor_cap, tail=tail)
 
     def compile(self, *, target=None, policy: Optional[str] = "pallas",
-                revec: bool = False, jit: bool = True) -> "CompiledKernel":
+                revec: bool = False, jit: bool = True,
+                tuned: bool = False, factor_cap: Optional[int] = None,
+                tail: str = "auto") -> "CompiledKernel":
         """Compile to a single jitted JAX function (one XLA executable
         instead of one Python dispatch per strip iteration).
 
@@ -257,13 +269,34 @@ class PortedKernel:
         are burned into the trace, so the resolved machine is pinned
         into the executable (and the cache key), not re-read per call.
 
+        ``tuned=True`` consults the persisted autotuning cache
+        (:mod:`repro.port.autotune`): when a tuned decision exists for
+        this kernel on the resolved target, its LMUL regrouping
+        (``Target.with_lmul``) and retile knobs (factor cap, tail
+        policy) are applied; without one the static default compiles
+        unchanged.  Explicit ``factor_cap``/``tail`` arguments override
+        the cached decision.
+
         Results come from the process-wide bounded LRU (see
         :func:`compiled_cache_info`), keyed on this kernel plus the
         resolved Target *value* — not its name, so ad-hoc Targets that
-        share a registered name get their own entries.
+        share a registered name get their own entries — plus the retile
+        knobs.
         """
-        return _COMPILED_CACHE.get(self, target=target, policy=policy,
-                                   revec=revec, jit=jit)
+        from repro.core import targets as _targets
+        tgt = _targets.resolve_target(target)
+        if tuned and revec and tgt.vla:
+            from . import autotune as _autotune
+            d = _autotune.lookup(self, tgt)
+            if d is not None:
+                tgt = _targets.with_lmul(tgt, d.lmul)
+                if factor_cap is None:
+                    factor_cap = d.factor_cap
+                if tail == "auto":
+                    tail = d.tail
+        return _COMPILED_CACHE.get(self, target=tgt, policy=policy,
+                                   revec=revec, jit=jit,
+                                   factor_cap=factor_cap, tail=tail)
 
     def run_resilient(self, *args, target=None,
                       policy: Optional[str] = "pallas", revec: bool = True,
@@ -306,17 +339,21 @@ class CompiledKernel:
 
     def __init__(self, kernel: PortedKernel, *, target=None,
                  policy: Optional[str] = "pallas", revec: bool = False,
-                 jit: bool = True):
+                 jit: bool = True, factor_cap: Optional[int] = None,
+                 tail: str = "auto"):
         from repro.core import targets as _targets
         self.source_kernel = kernel
         self.target = _targets.resolve_target(target)
         self.policy = policy
         self.revec = revec
         self.jit = jit
+        self.factor_cap = factor_cap
+        self.tail = tail
         self.retiling: Optional[RetileResult] = None
         fn = kernel.fn
         if revec:
-            self.retiling = retile(fn, self.target)
+            self.retiling = retile(fn, self.target,
+                                   factor_cap=factor_cap, tail=tail)
             fn = self.retiling.fn
         self.fn = fn
         self._call = compile_fn(fn, policy=policy, target=self.target,
@@ -392,3 +429,7 @@ def report(kernel, *example_args, **kw) -> Dict:
     if isinstance(kernel, str):
         kernel = compile_kernel(kernel)
     return _report(kernel, *example_args, **kw)
+
+
+# imported last: autotune consults PortedKernel/CompiledKernel machinery
+from . import autotune  # noqa: E402

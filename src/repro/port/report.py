@@ -135,17 +135,33 @@ def report(kernel, *example_args,
                 }
         if executed:
             from repro import rvv
+            from repro.core import trace as _trace
             prog = rvv.emit(kernel, tgt)
             _, counts = rvv.run(prog, *example_args, with_counts=True)
             per = {}
+            calib = _trace.get_calibration()
+            # join on the *union* of simulated sites and estimated
+            # intrinsics: a vl=0 parked site still retires (the sim
+            # counts per-site before dispatch, access-free since PR 8)
+            # and an estimate-only intrinsic shows executed=0 — neither
+            # side of the join can silently drop a site and make the
+            # kernel look cheaper than it retires.
             names = set(counts["per_site"]) | set(rv["per_intrinsic"])
             for name in sorted(names):
                 retired = counts["per_site"].get(name, 0)
-                estimate = rv["per_intrinsic"].get(name, {}).get(
-                    "instrs", 0)
+                est_row = rv["per_intrinsic"].get(name, {})
+                estimate = est_row.get("instrs", 0)
                 per[name] = {"executed": retired,
                              "revec_instrs": estimate,
                              "diverges": retired != estimate}
+                if calib is not None:
+                    # the measured-count term: what the installed
+                    # calibration predicts this site retires
+                    f = calib["factors"].get(est_row.get("isa_op", ""),
+                                             calib["default"])
+                    pred = int(round(estimate * f / max(1, tgt.lmul)))
+                    per[name]["calibrated"] = pred
+                    per[name]["diverges_calibrated"] = retired != pred
             row["executed"] = {
                 "total": counts["executed"],
                 "vector": counts["vector"],

@@ -364,6 +364,10 @@ class RetileResult:
     # source location vetoed it (machine-checkable; notes stay the
     # human-readable rendering)
     vetoes: List[dict] = dataclasses.field(default_factory=list)
+    # the tuning knobs this result was produced under (autotune search
+    # space; defaults reproduce the historical untuned behavior)
+    factor_cap: Optional[int] = None
+    tail: str = "auto"
 
     @property
     def changed(self) -> bool:
@@ -375,7 +379,12 @@ class RetileResult:
         return self.strips - self.retiled
 
 
-def retile(fn: TFunction, target, strict: bool = False) -> RetileResult:
+TAIL_POLICIES = ("auto", "masked", "epilogue")
+
+
+def retile(fn: TFunction, target, strict: bool = False, *,
+           factor_cap: Optional[int] = None,
+           tail: str = "auto") -> RetileResult:
     """Re-tile ``fn``'s strip loops at ``target``'s effective register
     width.  Always returns a function (the original body re-emitted
     unchanged when nothing is re-tilable) plus the decisions taken.
@@ -385,13 +394,32 @@ def retile(fn: TFunction, target, strict: bool = False) -> RetileResult:
     none could be widened.  The default keeps the historical contract
     (narrow execution is a valid, conformant outcome — the degradation
     ladder records it instead of failing).
+
+    ``factor_cap`` and ``tail`` are the autotuner's knobs (defaults
+    reproduce the untuned behavior exactly):
+
+    * ``factor_cap`` bounds the widening factor below the register
+      group's natural headroom (a cap of 1 keeps every strip narrow) —
+      a shorter re-tile trades peak width for less remainder work at
+      small ``n``.
+    * ``tail`` picks the remainder strategy: ``"auto"`` prefers a
+      provable masked predicated tail and falls back, ``"masked"``
+      requires one (strips without a provable plan stay narrow), and
+      ``"epilogue"`` skips the mask and mops up with a narrow epilogue
+      loop where legal.  All three are conformant; they differ only in
+      how many instructions the remainder retires.
     """
     from . import faultinject as _fi
     from .resilience import RevecVeto
     _fi.fault_point("revec.retile", kernel=fn.name,
                     target=getattr(target, "name", None) or str(target))
+    if tail not in TAIL_POLICIES:
+        raise ValueError(f"tail must be one of {TAIL_POLICIES}, "
+                         f"got {tail!r}")
+    if factor_cap is not None and factor_cap < 1:
+        raise ValueError(f"factor_cap must be >= 1, got {factor_cap}")
     tgt = _targets.get_target(target)
-    res = _Retiler(fn, tgt).run()
+    res = _Retiler(fn, tgt, factor_cap=factor_cap, tail=tail).run()
     if strict and res.strips > 0 and res.retiled == 0:
         raise RevecVeto(
             f"no strip loop could be re-tiled at {tgt.name} "
@@ -401,9 +429,12 @@ def retile(fn: TFunction, target, strict: bool = False) -> RetileResult:
 
 
 class _Retiler:
-    def __init__(self, fn: TFunction, tgt: _targets.Target):
+    def __init__(self, fn: TFunction, tgt: _targets.Target, *,
+                 factor_cap: Optional[int] = None, tail: str = "auto"):
         self.fn = fn
         self.tgt = tgt
+        self.factor_cap = factor_cap
+        self.tail = tail
         self.notes: List[str] = []
         self.vetoes: List[dict] = []
         self.vmap: Dict[int, Value] = {}       # id(old Value) -> new
@@ -460,7 +491,8 @@ class _Retiler:
                             factor=self.factor_used,
                             strips=len(self.strips), retiled=self.retiled,
                             masked=self.masked, notes=self.notes,
-                            vetoes=self.vetoes)
+                            vetoes=self.vetoes,
+                            factor_cap=self.factor_cap, tail=self.tail)
 
     # -- generic region copy ----------------------------------------------
     def emit_block_into(self, src: Block, dst: Block, top=False):
@@ -522,10 +554,16 @@ class _Retiler:
         for ty in _body_vec_types(loop):
             f = self.tgt.retile_factor(ty.lanes, ty.dtype)
             factor = f if factor is None else max(factor, f)
+        if factor and self.factor_cap is not None:
+            # tuning knob: the autotuner may bound widening below the
+            # register group's natural headroom (cap 1 == stay narrow)
+            factor = min(factor, self.factor_cap)
         if not factor or factor <= 1:
             self.notes.append(
                 f"strip at {strip.step} elems/iter: no width headroom "
-                f"on {self.tgt.name}")
+                f"on {self.tgt.name}"
+                + (f" (factor_cap={self.factor_cap})"
+                   if self.factor_cap is not None else ""))
             return False
         self._group_loads = set()
         self._fold_phis = set()
@@ -542,7 +580,20 @@ class _Retiler:
         if not self.check_memory_sites(strip):
             return False
 
-        plan = self.plan_masked_tail(strip)
+        plan = (self.plan_masked_tail(strip)
+                if self.tail in ("auto", "masked") else None)
+        if self.tail == "epilogue" and self._fold_phis:
+            # a foldable accumulator's group fold only folds correctly
+            # under a masked tail; without one the strip must not widen
+            return self.veto(
+                "tail-policy-epilogue",
+                "epilogue tail policy forbids the masked tail a "
+                "fold-accumulator strip requires; kept narrow")
+        if self.tail == "masked" and plan is None:
+            return self.veto(
+                "tail-policy-masked",
+                "masked tail policy requested but no provable masked "
+                "tail plan exists; kept narrow")
         tail_exists = _tail_consumes(strip)
         if plan is None and self._fold_phis:
             return self.veto(

@@ -1220,11 +1220,15 @@ def _single_user(block: Block, val: Value):
 # entry point
 # ---------------------------------------------------------------------------
 
-def emit(kernel, target=None, *, revec: bool = True) -> RvvProgram:
+def emit(kernel, target=None, *, revec: bool = True,
+         factor_cap=None, tail: str = "auto") -> RvvProgram:
     """Emit the RVV program for ``kernel`` (a PortedKernel or TFunction)
     on ``target``.  With ``revec=True`` (default) the IR is first
     re-tiled at the target's VLEN x LMUL, so the emitted ``vsetvli``
-    carries the widened strip's real element count."""
+    carries the widened strip's real element count.  ``factor_cap`` and
+    ``tail`` pass through to :func:`repro.port.revec.retile` — the
+    autotuner's knobs, so a tuned configuration can be fact-checked on
+    the simulator before it is cached."""
     tgt = _targets.resolve_target(target)
     if not tgt.vla:
         raise CodegenError(f"RVV codegen needs an rvv target, "
@@ -1233,7 +1237,7 @@ def emit(kernel, target=None, *, revec: bool = True) -> RvvProgram:
     retiling = None
     if revec:
         from repro.port.revec import retile
-        retiling = retile(fn, tgt)
+        retiling = retile(fn, tgt, factor_cap=factor_cap, tail=tail)
         fn = retiling.fn
     em = _Emit(fn, tgt)
     body: List[Any] = []

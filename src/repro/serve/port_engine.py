@@ -174,10 +174,15 @@ class PortEngine:
     def __init__(self, *, target: Any = None, policy: str = "pallas",
                  revec: bool = True, bucket_policy: Any = "fine",
                  max_batch: int = 32, compile_retries: int = 1,
-                 on_error: str = "return"):
+                 on_error: str = "return", tuned: bool = False):
         self.target = target            # engine default; per-request override
         self.policy = policy
         self.revec = bool(revec)
+        # consult the persisted autotuning cache on every compile: a
+        # deploy that ran (or shipped) a tuning pass starts with the
+        # tuned LMUL regrouping + retile knobs instead of the static
+        # defaults (repro.port.autotune; decisions survive restarts)
+        self.tuned = bool(tuned)
         self.bucket_policy = (BucketPolicy.preset(bucket_policy)
                               if isinstance(bucket_policy, str)
                               else bucket_policy)
@@ -280,7 +285,8 @@ class PortEngine:
                     # executable serves the whole batch
                     eager = kernel.compile(
                         target=tgt, policy=self.policy,
-                        revec=(rung == "compiled+revec"), jit=False)
+                        revec=(rung == "compiled+revec"), jit=False,
+                        tuned=self.tuned)
                     prog = jax.jit(jax.vmap(eager))
                 except Exception as exc:    # noqa: BLE001 — serve seam
                     err = _resilience.wrap_error(
@@ -466,6 +472,11 @@ class PortEngine:
         ``corpus`` is a dict (name -> PortedKernel, as returned by
         :func:`repro.port.load_corpus`) or an iterable of kernels;
         ``targets`` defaults to the engine's own target.
+
+        On a ``tuned=True`` engine every warmup compile consults the
+        persisted autotuning cache, so the deploy's executables start
+        at the tuned (LMUL, retile-factor, tail) configuration without
+        re-measuring anything.
         """
         kernels = (corpus.values() if isinstance(corpus, dict) else corpus)
         kernels = list(kernels)
@@ -476,7 +487,7 @@ class PortEngine:
             self._model(k)          # derive the padding rules up front
             for t in tgts:
                 k.compile(target=t, policy=self.policy,
-                          revec=self.revec, jit=False)
+                          revec=self.revec, jit=False, tuned=self.tuned)
                 n += 1
         return {"kernels": len(kernels), "targets": len(tgts),
                 "compiles": n}

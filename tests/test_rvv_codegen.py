@@ -163,6 +163,52 @@ def test_counts_reconcile_with_revec_estimate():
                                         != cell["revec_instrs"])
 
 
+def test_parked_offset_site_counted_and_conformant():
+    """A vl=0 *parked* offset site must neither vanish from the
+    executed-report join nor corrupt the result.
+
+    On rvv-1024 the x2-unrolled add re-tiles 8x, so one strip iteration
+    covers 64 elements with the second offset sites (a+4/b+4/y+4 in
+    NEON units, offset 32 after re-tiling) active for cnt-32 elements.
+    At n=20 that clamps to zero: the second sites are parked (vl=0) for
+    the *entire* run.  The simulator counts per-site before mnemonic
+    dispatch, so the retired stream is identical to a length where the
+    sites are live — and the report's union join must carry every
+    simulated site."""
+    case = CASES["xnn_f32_vadd_x2_ukernel"]
+    k = _kernel(case.kernel)
+    prog = rvv.emit(k, "rvv-1024")
+
+    def run(n, seed):
+        rng = np.random.default_rng(seed)
+        args = (n, rng.standard_normal(n).astype(np.float32),
+                rng.standard_normal(n).astype(np.float32),
+                np.zeros(n, np.float32))
+        out, counts = rvv.execute(prog, *args)
+        return args, out, counts
+
+    # n=20 parks the offset-32 sites (vl=0); n=36 activates them
+    args_p, out_p, parked = run(20, 5)
+    _args_a, _out_a, active = run(36, 6)
+    assert dict(parked["per_site"]) == dict(active["per_site"]), \
+        "parked sites must retire the same stream as active ones"
+    assert parked["executed"] > 0
+
+    # conformance at the parking length: sim == interp == reference
+    want = case.reference(*args_p)
+    _assert_matches(out_p, want, case, "parked-site sim vs reference")
+    _assert_matches(out_p, k(*args_p, target="rvv-1024"), case,
+                    "parked-site sim vs interp")
+
+    # the executed-report join is a union: every simulated site label
+    # appears, parked or not, with its retired count intact
+    rep = port.report(k, *args_p, sweep=("rvv-1024",), executed=True)
+    per = rep["targets"]["rvv-1024"]["executed"]["per_intrinsic"]
+    for label, retired in parked["per_site"].items():
+        assert label in per, f"join dropped simulated site {label!r}"
+        assert per[label]["executed"] == retired
+
+
 # ---------------------------------------------------------------------------
 # golden emitted units: codegen drift is a reviewed diff, not a silent one
 # ---------------------------------------------------------------------------

@@ -129,6 +129,50 @@ def test_selection_cache_hits():
     assert REGISTRY.cache_info()["misses"] == info2["misses"] + 3
 
 
+def test_selection_cache_accounting_invariant():
+    """Regression: the stat books must balance.  Shrinking the cache via
+    set_cache_capacity counts its evictions, and lookups whose key is
+    poisoned by an unhashable argument land in 'uncacheable' — never
+    silently in neither bucket — so hits + misses + uncacheable ==
+    lookups always holds."""
+    x = jnp.zeros((32, 32), jnp.float32)
+    REGISTRY.cache_clear()
+    old_cap = REGISTRY.cache_info()["capacity"]
+    try:
+        # five distinct entries, then shrink to 2: three shrink-evictions
+        for i in range(5):
+            REGISTRY.select("vadd", jnp.zeros(16 + i), jnp.zeros(16 + i),
+                            policy="pallas", target="rvv-128")
+        assert REGISTRY.cache_info()["size"] == 5
+        REGISTRY.set_cache_capacity(2)
+        info = REGISTRY.cache_info()
+        assert info["size"] == 2
+        assert info["evictions"] == 3, \
+            "shrink-evictions must be counted like insert-evictions"
+        # an unhashable kwarg poisons the key: selection still answers,
+        # the lookup books as uncacheable (not a miss, never a hit)
+        before = REGISTRY.cache_info()
+        a = REGISTRY.select("vadd", x, x, policy="pallas",
+                            target="rvv-128", meta={"un": "hashable"})
+        b = REGISTRY.select("vadd", x, x, policy="pallas",
+                            target="rvv-128", meta={"un": "hashable"})
+        assert a.tier == b.tier == "vector"
+        info = REGISTRY.cache_info()
+        assert info["uncacheable"] == before["uncacheable"] + 2
+        assert info["hits"] == before["hits"]
+        assert info["misses"] == before["misses"]
+        # the invariant the autotune layer keys off
+        assert info["lookups"] == \
+            info["hits"] + info["misses"] + info["uncacheable"]
+        # cache_clear resets every counter, including the new bucket
+        REGISTRY.cache_clear()
+        info = REGISTRY.cache_info()
+        assert (info["hits"], info["misses"], info["evictions"],
+                info["uncacheable"], info["lookups"]) == (0, 0, 0, 0, 0)
+    finally:
+        REGISTRY.set_cache_capacity(old_cap)
+
+
 def test_explain_report_shape():
     x = jnp.zeros((128, 128), jnp.float32)
     rep = explain("vsigmoid", x, policy="pallas", target="rvv-128")
